@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: XLA-oracle wall time (CPU) + interpret-mode
+validation of each Pallas kernel at bench shapes.  On-TPU timing is the
+deploy-time path; here the derived column reports correctness deltas and
+achieved CPU-oracle throughput for regression tracking."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.merge_runs.kernel import merge_runs_pallas
+from repro.kernels.merge_runs.ref import merge_runs_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def timeit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps, out
+
+
+def main(emit) -> None:
+    key = jax.random.PRNGKey(0)
+    # flash attention: serving-like shape
+    b, s, h, kh, d = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+    tref, ref = timeit(jax.jit(flash_attention_ref), q, k, v)
+    out = flash_attention_pallas(q, k, v, block_q=128, block_k=128, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    flops = 4 * b * s * s // 2 * h * d
+    emit(f"kernel:flash_attn_b{b}s{s}h{h}d{d},{tref*1e6:.1f},gflops_oracle={flops/tref/1e9:.1f};pallas_err={err:.1e}")
+
+    # ssd scan: mamba2-like head block
+    b, s, hh, p, g, n, L = 2, 2048, 8, 64, 1, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, hh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, hh))) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[2], (hh,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    f = jax.jit(lambda *a_: ssd_scan_ref(*a_, chunk=L))
+    tref, (yref, sref) = timeit(f, x, dt, a, bm, cm)
+    ypl, spl = ssd_scan_pallas(x[:, :256], dt[:, :256], a, bm[:, :256], cm[:, :256], chunk=64, interpret=True)
+    yr2, _ = ssd_scan_ref(x[:, :256], dt[:, :256], a, bm[:, :256], cm[:, :256], chunk=64)
+    err = float(jnp.max(jnp.abs(ypl - yr2)))
+    emit(f"kernel:ssd_scan_b{b}s{s}h{hh}p{p}n{n},{tref*1e6:.1f},tokens_per_s_oracle={b*s/tref:.0f};pallas_err={err:.1e}")
+
+    # merge runs: compaction tile merge
+    g_, t_ = 64, 512
+    rng = np.random.default_rng(0)
+    ak = jnp.asarray(np.sort(rng.integers(0, 1 << 30, (g_, t_)).astype(np.int32), axis=1))
+    bk = jnp.asarray(np.sort(rng.integers(0, 1 << 30, (g_, t_)).astype(np.int32), axis=1))
+    av = jnp.asarray(rng.integers(0, 1 << 30, (g_, t_)).astype(np.int32))
+    bv = jnp.asarray(rng.integers(0, 1 << 30, (g_, t_)).astype(np.int32))
+    tref, refout = timeit(jax.jit(merge_runs_ref), ak, bk, av, bv)
+    ok, ov = merge_runs_pallas(ak[:8], bk[:8], av[:8], bv[:8], interpret=True)
+    rk, _ = merge_runs_ref(ak[:8], bk[:8], av[:8], bv[:8])
+    exact = bool(jnp.all(ok == rk))
+    keys_per_s = g_ * 2 * t_ / tref
+    emit(f"kernel:merge_runs_g{g_}t{t_},{tref*1e6:.1f},keys_per_s_oracle={keys_per_s/1e6:.1f}M;pallas_exact={exact}")

@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each benchmark emits ``name,us_per_call,derived`` CSV rows and asserts the
+paper's qualitative claims (orderings/ratios) on the scaled workloads —
+failures here mean the reproduction no longer matches the paper.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run fig1 merge  # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (
+    bench_ablation,
+    bench_thresholds,
+    bench_checkpoint,
+    bench_fig1,
+    bench_kernels,
+    bench_loadrun,
+    bench_merge,
+    bench_model,
+    bench_roofline,
+    bench_ycsb,
+)
+
+BENCHES = [
+    ("model_fig2", bench_model.main),
+    ("fig1_small_kv_gc", bench_fig1.main),
+    ("fig5_ycsb", bench_ycsb.main),
+    ("fig6_loadrun", bench_loadrun.main),
+    ("fig7_medium_ablation", bench_ablation.main),
+    ("thresholds_beyond_paper", bench_thresholds.main),
+    ("fig8_merge_level", bench_merge.main),
+    ("kernels", bench_kernels.main),
+    ("checkpoint_substrate", bench_checkpoint.main),
+    ("roofline", bench_roofline.main),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            fn(lambda row: print(row, flush=True))
+            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except AssertionError as e:
+            failures.append((name, e))
+            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},CLAIM-FAILED:{e}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Parallax KV-store walkthrough: hybrid placement, GC, crash recovery.
+
+    PYTHONPATH=src python examples/kvstore_demo.py
+"""
+from repro.core import ParallaxStore, StoreConfig
+from repro.core.ycsb import Workload, execute, payload
+
+
+def main() -> None:
+    st = ParallaxStore(StoreConfig(
+        mode="parallax", l0_capacity=1 << 14, growth_factor=4,
+        cache_bytes=1 << 17, segment_bytes=1 << 17, chunk_bytes=1 << 13,
+    ))
+
+    print("=== load a medium-dominated workload ===")
+    execute(st, Workload("load_a", "MD", num_keys=5000, num_ops=0).load_ops())
+    s = st.checkpoint_stats()
+    print(f"levels={s['levels']} medium_segments={s['medium_log_segments']} "
+          f"large_segments={s['large_log_segments']} amp={s['amplification']:.2f}")
+
+    print("=== point ops across the three categories ===")
+    st.put(b"small-key-000000000000", payload(9))
+    st.put(b"medium-key-00000000000", payload(104))
+    st.put(b"large-key-000000000000", payload(1004))
+    for k in (b"small-key-000000000000", b"medium-key-00000000000", b"large-key-000000000000"):
+        v = st.get(k)
+        print(f"  get {k.decode():24s} -> {len(v)}B")
+
+    print("=== updates create garbage; GC reclaims large-log segments ===")
+    for _ in range(3):
+        for i in range(500):
+            st.update(f"user{i:019d}".encode(), payload(1004))
+    before = len(st.large_log.segments)
+    reclaimed = st.gc_tick()
+    print(f"  segments before={before} reclaimed={reclaimed} "
+          f"gc_lookups={st.stats.gc_lookups} relocations={st.stats.gc_relocations}")
+
+    print("=== crash / prefix-consistent recovery ===")
+    st.put(b"durable-key-0000000000", payload(104))
+    cutoff = st.crash()
+    st.recover()
+    print(f"  recovered to LSN {cutoff} (of {st.lsn}); "
+          f"scan head: {[k[:12] for k, _ in st.scan(b'', 3)]}")
+    print(f"final amplification: {st.amplification():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Parallax core: hybrid KV placement in an LSM store (the paper's contribution).
+
+Public surface:
+
+* :mod:`repro.core.model` — the paper's I/O-amplification model (Eq. 1-4, R(i))
+* :class:`repro.core.store.ParallaxStore` — the store (modes: parallax,
+  rocksdb, blobdb, nomerge; MS/ML threshold variants)
+* :mod:`repro.core.ycsb` — YCSB workload generation (Table 1 mixes)
+"""
+from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats
+from .logs import Log, LogEntry, Pointer, TransientLog
+from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, IndexEntry, Level
+from .model import (
+    T_ML,
+    T_SM,
+    SizePolicy,
+    amplification_inplace,
+    amplification_inplace_sum,
+    amplification_separated,
+    capacity_ratio,
+    levels_for_dataset,
+    separation_benefit,
+)
+from .store import ParallaxStore, StoreConfig, StoreStats
+
+__all__ = [
+    "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats",
+    "Log", "LogEntry", "Pointer", "TransientLog",
+    "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "IndexEntry", "Level",
+    "T_ML", "T_SM", "SizePolicy",
+    "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
+    "capacity_ratio", "levels_for_dataset", "separation_benefit",
+    "ParallaxStore", "StoreConfig", "StoreStats",
+]

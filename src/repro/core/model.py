@@ -1,0 +1,126 @@
+"""Analytical I/O-amplification model from the paper (Section 2).
+
+Implements Equations 1-4 plus the level-capacity ratio R(i) used to bound the
+transient-log space amplification (Section 3.3).  These are the quantitative
+basis for the hybrid-placement thresholds ``T_SM``/``T_ML`` and are validated
+against closed forms in tests and reproduced as paper Fig. 2 in
+``benchmarks/bench_model.py``.
+
+All functions are pure and operate on python scalars or jnp arrays so the
+curves can be evaluated vectorized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Paper Section 2.2 / Section 4: thresholds on p = key(prefix) / KV size.
+T_ML = 0.02  # below this: "large" KV pairs   (log always; GC affordable)
+T_SM = 0.20  # above this: "small" KV pairs   (in place; log not worth GC)
+
+
+def amplification_inplace_sum(levels: int, growth_factor: int, s0: float) -> float:
+    """Equation 1 evaluated literally (the explicit per-level double sum).
+
+    ``levels`` is ``l`` (the index of the last level; levels are L0..Ll), so
+    there are ``l`` merge boundaries.  ``s0`` is the L0 (memory) size and the
+    dataset is ``S_l = s0 * f**l``.  Returns total device traffic D.
+    """
+    f = growth_factor
+    sl = s0 * f**levels
+    total = 0.0
+    for i in range(levels):  # sub-expression for level i -> i+1
+        si = s0 * f**i
+        merges = int(round(sl / si))
+        read_write_upper = (1 if i == 0 else 2) * si * merges
+        lower = 2 * sum(((j - 1) % f) * si for j in range(1, merges + 1))
+        total += read_write_upper + lower
+    return total
+
+
+def amplification_inplace(levels: int, growth_factor: int, sl: float = 1.0) -> float:
+    """Equation 2 closed form: D = S_l * (l - 1 + f*l)."""
+    return sl * (levels - 1 + growth_factor * levels)
+
+
+def amplification_separated(levels: int, growth_factor: int, p: float, sl: float = 1.0) -> float:
+    """Equation 3 closed form: D' = K_l*(l-1+f*l) + S_l with K_l = p*S_l."""
+    return p * sl * (levels - 1 + growth_factor * levels) + sl
+
+
+def separation_benefit(levels: int, growth_factor: int, p):
+    """Equation 4: D/D' = (l-1+f*l) / (p*(l-1+f*l) + 1).
+
+    ``p`` may be a scalar or an array; returns the same shape.
+    """
+    a = levels - 1 + growth_factor * levels
+    p = jnp.asarray(p, dtype=jnp.float64 if jnp.array(0.0).dtype == jnp.float64 else jnp.float32)
+    return a / (p * a + 1.0)
+
+
+def capacity_ratio(num_levels: int, growth_factor: int, i: int) -> float:
+    """R(i) = (1 - f^(N-i)) / (1 - f^N): fraction of total LSM capacity held by
+    the first N-i levels (paper Section 3.3, Fig. 2b).  This bounds the space
+    amplification of keeping medium KVs in the transient log until level N-i.
+    """
+    f = float(growth_factor)
+    n = num_levels
+    return (1.0 - f ** (n - i)) / (1.0 - f**n)
+
+
+@dataclasses.dataclass(frozen=True)
+class SizePolicy:
+    """The paper's size classifier (Section 3.1).
+
+    ``p`` is computed with the *index entry* size as numerator: Parallax stores
+    a fixed prefix (12 B) + a log pointer in the index, so the classifier uses
+    ``prefix_size`` rather than the full (variable) key, per Section 2.2.
+    """
+
+    t_sm: float = T_SM
+    t_ml: float = T_ML
+    prefix_size: int = 12
+    pointer_size: int = 8
+
+    def p_of(self, key_size, value_size):
+        """Ratio p for a KV pair; sizes may be scalars or arrays."""
+        kv = jnp.asarray(key_size) + jnp.asarray(value_size)
+        return jnp.minimum(jnp.asarray(key_size), self.prefix_size) / kv
+
+    def classify(self, key_size, value_size):
+        """0 = small (in place), 1 = medium (transient log), 2 = large (log).
+
+        Vectorized: accepts arrays, returns int32 array of categories.
+        """
+        p = self.p_of(key_size, value_size)
+        return jnp.where(p > self.t_sm, 0, jnp.where(p < self.t_ml, 2, 1)).astype(jnp.int32)
+
+    def classify_scalar(self, key_size: int, value_size: int) -> int:
+        # pure-python fast path (the store calls this per op; no jnp dispatch)
+        p = min(key_size, self.prefix_size) / (key_size + value_size)
+        if p > self.t_sm:
+            return 0
+        if p < self.t_ml:
+            return 2
+        return 1
+
+
+def levels_for_dataset(dataset_bytes: float, l0_bytes: float, growth_factor: int) -> int:
+    """Number of levels l such that S_l = l0 * f**l >= dataset (min 1)."""
+    l = 1
+    cap = l0_bytes * growth_factor
+    while cap < dataset_bytes:
+        l += 1
+        cap *= growth_factor
+    return l
+
+
+def expected_benefit_table(levels: int, growth_factor: int, ps: Sequence[float]) -> np.ndarray:
+    """Convenience for benchmarks: rows of (p, D/D')."""
+    out = []
+    for p in ps:
+        out.append((p, float(separation_benefit(levels, growth_factor, p))))
+    return np.asarray(out)

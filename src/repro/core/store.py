@@ -1,0 +1,526 @@
+"""Parallax: an LSM KV store with hybrid key-value placement (paper §3).
+
+One class implements all four system modes evaluated in the paper:
+
+* ``parallax`` — hybrid placement: small in place, large in the Large log
+  (with segment GC), medium in the transient log merged in place at the last
+  ``merge_depth`` level(s)  (§3.1–§3.3).
+* ``rocksdb``  — everything in place (the RocksDB baseline).
+* ``blobdb``   — full KV separation: everything in the value log, periodic
+  scan-30% GC after compactions (the BlobDB baseline).
+* ``nomerge``  — Fig. 8's non-achievable ideal: mediums stay in the log
+  forever, no GC and no in-place merge.
+
+Parallax-MS / Parallax-ML (Fig. 7) are the ``parallax`` mode with collapsed
+thresholds (``t_sm == t_ml``).
+
+The store is functionally correct (put/get/update/delete/scan with LSN
+ordering, tombstones, crash/recover) and every byte that would touch the
+device flows through :class:`repro.core.io.Device`, which is how the
+benchmarks reproduce the paper's amplification numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterable
+
+from .io import BLOCK, SEGMENT, Device
+from .logs import Log, LogEntry, Pointer, TransientLog
+from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, IndexEntry, Level, merge_runs
+from .model import SizePolicy
+
+# virtual address regions so leaf probes of different levels hit different
+# cache blocks (logs get their own offsets from the allocator)
+_LEVEL_REGION = 1 << 40
+
+
+@dataclasses.dataclass
+class StoreStats:
+    inserts: int = 0
+    updates: int = 0
+    deletes: int = 0
+    gets: int = 0
+    scans: int = 0
+    found: int = 0
+    app_bytes: int = 0          # application traffic (user KV bytes in+out)
+    index_probes: int = 0       # binary-search leaf probes
+    entries_merged: int = 0     # compaction merge work
+    gc_lookups: int = 0         # GC validity lookups (paper 'lookup cost')
+    gc_relocations: int = 0     # GC relocations (paper 'cleanup cost')
+    compactions: int = 0
+
+
+@dataclasses.dataclass
+class StoreConfig:
+    mode: str = "parallax"               # parallax | rocksdb | blobdb | nomerge
+    t_sm: float = 0.20
+    t_ml: float = 0.02
+    l0_capacity: int = 1 << 20           # bytes of L0 before flush
+    growth_factor: int = 8
+    merge_depth: int = 1                 # mediums in place at the last k levels
+    sorted_segments: bool = True         # eager L0 sorting of transient segments
+    gc_threshold: float = 0.10           # parallax large-log GC trigger (§4)
+    blobdb_scan_fraction: float = 0.30   # BlobDB GC scan fraction (§4)
+    cache_bytes: int = 4 << 20
+    auto_gc: bool = True                 # run GC after compactions (blobdb) / ticks
+    blobdb_gc_every_flushes: int = 4     # GC wake frequency (scales the paper's
+                                         # 'after a compaction' to our small L0)
+    prefix_size: int = 12
+    segment_bytes: int = 2 << 20         # log/level allocation granularity (§3.4)
+    chunk_bytes: int = 256 << 10         # log append group-commit chunk (§3.4)
+
+    def policy(self) -> SizePolicy:
+        return SizePolicy(t_sm=self.t_sm, t_ml=self.t_ml, prefix_size=self.prefix_size)
+
+
+class ParallaxStore:
+    def __init__(self, config: StoreConfig | None = None):
+        self.config = config or StoreConfig()
+        self.device = Device(
+            cache_bytes=self.config.cache_bytes,
+            segment_bytes=self.config.segment_bytes,
+            chunk_bytes=self.config.chunk_bytes,
+        )
+        self.policy = self.config.policy()
+        self.stats = StoreStats()
+        self.lsn = 0
+        self.l0: dict[bytes, IndexEntry] = {}
+        self.l0_bytes = 0
+        self.levels: list[Level] = []
+        self.small_log = Log(self.device, "small")     # WAL for small+medium
+        self.medium_log = TransientLog(self.device, "medium")
+        self.large_log = Log(self.device, "large")
+        self.compacted_lsn = 0                          # catalog high-water mark
+        self._durable: dict[str, int] = {"small": 0, "medium": 0, "large": 0}
+        self._gc_region: dict[int, int] = {}            # seg offset -> dead bytes (info)
+        self._in_gc = False                             # reentrancy guard
+
+    # ------------------------------------------------------------------ sizes
+    def _classify(self, key: bytes, value: bytes) -> int:
+        mode = self.config.mode
+        if mode == "rocksdb":
+            return CAT_SMALL
+        if mode == "blobdb":
+            return CAT_LARGE
+        return int(self.policy.classify_scalar(len(key), len(value)))
+
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def _capacity(self, level_idx: int) -> int:
+        return self.config.l0_capacity * self.config.growth_factor ** (level_idx + 1)
+
+    def _in_place_zone(self, level_idx: int) -> bool:
+        if self.config.mode in ("nomerge", "blobdb"):
+            return False
+        if self.config.mode == "rocksdb":
+            return True
+        return level_idx >= len(self.levels) - self.config.merge_depth
+
+    # ------------------------------------------------------------------- puts
+    def put(self, key: bytes, value: bytes) -> None:
+        self._write(key, value, tombstone=False)
+
+    def update(self, key: bytes, value: bytes) -> None:
+        self.stats.updates += 1
+        self._write(key, value, tombstone=False, counted=True)
+
+    def delete(self, key: bytes) -> None:
+        self.stats.deletes += 1
+        self._write(key, b"", tombstone=True, counted=True)
+
+    def _write(self, key: bytes, value: bytes, *, tombstone: bool, counted: bool = False, internal: bool = False) -> None:
+        if not internal:
+            if not counted:
+                self.stats.inserts += 1
+            self.stats.app_bytes += len(key) + len(value)
+        self.lsn += 1
+        cat = CAT_SMALL if tombstone else self._classify(key, value)
+        entry = IndexEntry(
+            key=key, lsn=self.lsn, category=cat, tombstone=tombstone,
+            kv_size=len(key) + len(value),
+            slot_bytes=0 if self.config.mode == "rocksdb" else 4,
+        )
+        log_entry = LogEntry(self.lsn, key, value, cat, tombstone=tombstone)
+        if cat == CAT_LARGE and not tombstone:
+            ptr = self.large_log.append(log_entry)
+            entry.ptr, entry.log = ptr, "large"
+        else:
+            # small / medium / tombstone: WAL to Small log, value rides in L0
+            self.small_log.append(log_entry)
+            entry.value = value if not tombstone else None
+        old = self.l0.get(key)
+        if old is not None:
+            self._mark_superseded(old)
+            self.l0_bytes -= old.logical_size()
+        self.l0[key] = entry
+        self.l0_bytes += entry.logical_size()
+        if self.l0_bytes >= self.config.l0_capacity:
+            self.flush_l0()
+
+    def _mark_superseded(self, entry: IndexEntry) -> None:
+        if entry.ptr is None:
+            return
+        log = self.large_log if entry.log == "large" else self.medium_log
+        log.mark_dead(entry.ptr)
+        if entry.log == "large":
+            seg = log.segments.get(entry.ptr.segment_id)
+            if seg is not None:
+                # GC-region bookkeeping: free-space counter keyed by segment
+                # start offset (16 B KV put into the private GC region, §3.2)
+                self._gc_region[seg.offset] = seg.dead_bytes
+                self.device.sequential_write(16, BLOCK, kind="log")
+
+    # ------------------------------------------------------------ compactions
+    def flush_l0(self) -> None:
+        if not self.l0:
+            return
+        run = [self.l0[k] for k in sorted(self.l0)]
+        max_lsn = max(e.lsn for e in run)
+        self.l0.clear()
+        self.l0_bytes = 0
+        # the compacted level will reference log offsets, so logs must be
+        # durable up to here (paper §3.4: the redo record logs the log offsets
+        # covered by the L0->L1 compaction)
+        self.large_log.flush()
+        self._merge_into(0, run, from_l0=True, src_segments=[])
+        self.compacted_lsn = max(self.compacted_lsn, max_lsn)
+        # WAL reclaim: everything in the Small log is now durable in L1+
+        self.small_log.flush()
+        for seg in list(self.small_log.iter_segments()):
+            self.small_log.reclaim(seg.segment_id)
+        self._write_redo_record()
+        self._cascade(0)
+        self._flushes = getattr(self, "_flushes", 0) + 1
+        if (
+            self.config.mode == "blobdb"
+            and self.config.auto_gc
+            and self._flushes % self.config.blobdb_gc_every_flushes == 0
+        ):
+            self.gc_tick(force=True)
+
+    def _cascade(self, start_idx: int) -> None:
+        j = start_idx
+        while j < len(self.levels):
+            lvl = self.levels[j]
+            if lvl.index_bytes <= self._capacity(j):
+                j += 1
+                continue
+            run = lvl.entries
+            src_segs = lvl.clear()
+            # reading the upper level for the merge (direct I/O, §3.4)
+            self.device.sequential_read(sum(e.index_size() for e in run), self.device.segment_bytes, kind="compaction")
+            self._merge_into(j + 1, run, from_l0=False, src_segments=src_segs)
+            self._write_redo_record()
+            j += 1
+
+    def _merge_into(self, dst_idx: int, run: list[IndexEntry], *, from_l0: bool, src_segments: list[int]) -> None:
+        """Merge a sorted run (from L0 or level dst_idx-1) into levels[dst_idx]."""
+        cfg = self.config
+        while len(self.levels) <= dst_idx:
+            self.levels.append(Level(len(self.levels)))
+        dst = self.levels[dst_idx]
+        self.stats.compactions += 1
+        # read the lower (larger) level in full (paper Eq. 1 assumption / §3.4)
+        self.device.sequential_read(dst.index_bytes, self.device.segment_bytes, kind="compaction")
+
+        is_last = dst_idx == len(self.levels) - 1
+        merged, dead = merge_runs(run, dst.entries, drop_tombstones=is_last)
+        self.stats.entries_merged += len(merged)
+        for d in dead:
+            self._mark_superseded(d)
+
+        in_place = self._in_place_zone(dst_idx)
+        pre_segment_ids = set(self.medium_log.segments.keys())
+        new_segments: list[int] = []
+        consumed_segments: set[int] = set()
+        if in_place:
+            # fetch every transient segment attached to src+dst exactly once
+            for sid in {*src_segments, *dst.transient_segments}:
+                if sid in self.medium_log.segments:
+                    self.medium_log.merge_read(sid)
+                    consumed_segments.add(sid)
+        out: list[IndexEntry] = []
+        for e in merged:
+            if e.category == CAT_MEDIUM and not e.tombstone and cfg.mode in ("parallax", "nomerge"):
+                if in_place:
+                    if e.ptr is not None:
+                        val = self.medium_log.get(e.ptr).value
+                        e = dataclasses.replace(e, ptr=None, log=None, value=val)
+                else:
+                    if e.ptr is None:
+                        # L0 medium: append (merge-sorted order) to transient log
+                        ptr = self.medium_log.append(LogEntry(e.lsn, e.key, e.value or b"", CAT_MEDIUM))
+                        e = dataclasses.replace(e, ptr=ptr, log="medium", value=None)
+            out.append(e)
+        # seal + attach transient segments produced by this merge
+        self.medium_log.seal_tail(cfg.sorted_segments)
+        if not in_place:
+            survivors = [
+                sid for sid in {*src_segments, *dst.transient_segments}
+                if sid in self.medium_log.segments
+            ]
+            created = [
+                sid for sid in self.medium_log.segments if sid not in pre_segment_ids
+            ]
+            new_segments = survivors + created
+        else:
+            for sid in consumed_segments:
+                self.medium_log.reclaim(sid)
+        dst.rebuild(out)
+        dst.transient_segments = sorted(set(new_segments))
+        # write the merged level (2 MB segment granularity direct I/O)
+        self.device.sequential_write(dst.index_bytes, self.device.segment_bytes, kind="compaction")
+
+    def _write_redo_record(self) -> None:
+        # allocation/free lists + catalog entry (§3.4) — one small append
+        self.device.sequential_write(512, BLOCK, kind="log")
+
+    # ------------------------------------------------------------------- gets
+    def _probe_level(self, lvl: Level, key: bytes) -> IndexEntry | None:
+        self.stats.index_probes += 1
+        if not lvl.entries:
+            return None
+        base = _LEVEL_REGION * (lvl.index + 1)
+        block = base + (hash(key) % max(1, lvl.index_bytes)) // BLOCK * BLOCK
+        self.device.random_read(block, 1, kind="get")  # leaf block through cache
+        return lvl.find(key)
+
+    def _locate(self, key: bytes, *, kind: str = "get") -> IndexEntry | None:
+        entry = self.l0.get(key)
+        if entry is not None:
+            return entry
+        for lvl in self.levels:
+            e = self._probe_level(lvl, key)
+            if e is not None:
+                return e
+        return None
+
+    def get(self, key: bytes) -> bytes | None:
+        self.stats.gets += 1
+        entry = self._locate(key)
+        if entry is None or entry.tombstone:
+            return None
+        self.stats.found += 1
+        value = self._value_of(entry)
+        self.stats.app_bytes += len(key) + len(value)
+        return value
+
+    def _value_of(self, entry: IndexEntry, kind: str = "get") -> bytes:
+        if entry.in_place:
+            return entry.value or b""
+        log = self.large_log if entry.log == "large" else self.medium_log
+        return log.read(entry.ptr, kind=kind).value
+
+    # ------------------------------------------------------------------- scan
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Merge per-level scanners (newest LSN wins), return up to count pairs."""
+        self.stats.scans += 1
+        iters: list[Iterable[IndexEntry]] = []
+        l0_items = [self.l0[k] for k in sorted(self.l0) if self.l0[k].key >= start]
+        iters.append(iter(l0_items))
+        for lvl in self.levels:
+            iters.append(lvl.iter_from(start))
+        heap: list[tuple[bytes, int, int, IndexEntry]] = []
+        for src, it in enumerate(iters):
+            e = next(it, None)
+            if e is not None:
+                heapq.heappush(heap, (e.key, -e.lsn, src, e))
+        its = iters
+        out: list[tuple[bytes, bytes]] = []
+        last_key: bytes | None = None
+        scanned_bytes = [0] * len(its)
+        while heap and len(out) < count:
+            key, _, src, e = heapq.heappop(heap)
+            nxt = next(its[src], None)
+            if nxt is not None:
+                heapq.heappush(heap, (nxt.key, -nxt.lsn, src, nxt))
+            if key == last_key:
+                continue
+            last_key = key
+            if e.tombstone:
+                continue
+            # leaf bytes stream sequentially per level; log values are random
+            if src > 0:
+                lvl = self.levels[src - 1]
+                base = _LEVEL_REGION * lvl.index + scanned_bytes[src]
+                self.device.random_read(base, e.index_size(), kind="get")
+                scanned_bytes[src] += e.index_size()
+            value = self._value_of(e)
+            self.stats.app_bytes += len(key) + len(value)
+            out.append((key, value))
+        return out
+
+    # --------------------------------------------------------------------- GC
+    def gc_tick(self, force: bool = False) -> int:
+        """Large-log GC (parallax, §3.2) or scan-fraction GC (blobdb).
+
+        Returns the number of segments reclaimed.  With ``auto_gc=False`` the
+        periodic ticks are disabled unless forced (the Fig. 1 no-GC variant).
+        """
+        cfg = self.config
+        if cfg.mode in ("rocksdb", "nomerge") or self._in_gc:
+            return 0
+        if not cfg.auto_gc and not force:
+            return 0
+        segs = [s for s in self.large_log.iter_segments() if s is not self.large_log._tail]
+        if cfg.mode == "parallax":
+            victims = [s for s in segs if s.invalid_fraction() >= cfg.gc_threshold]
+        else:  # blobdb: scan the oldest fraction of the log after compaction
+            segs.sort(key=lambda s: s.segment_id)
+            n = max(1, int(len(segs) * cfg.blobdb_scan_fraction)) if segs else 0
+            victims = segs[:n]
+        reclaimed = 0
+        self._in_gc = True
+        try:
+            for seg in victims:
+                # (1) identify: scan the segment + one index lookup per KV
+                self.device.sequential_read(seg.used_bytes, self.device.segment_bytes, kind="gc")
+                live: list[LogEntry] = []
+                for slot, le in enumerate(seg.entries):
+                    if le is None:
+                        continue
+                    self.stats.gc_lookups += 1
+                    cur = self._lookup_for_gc(le.key)
+                    if (
+                        cur is not None
+                        and cur.ptr is not None
+                        and cur.ptr.segment_id == seg.segment_id
+                        and cur.ptr.slot == slot
+                        and not cur.tombstone
+                    ):
+                        live.append(le)
+                if cfg.mode == "blobdb" and seg.dead_bytes == 0:
+                    # nothing to clean: identification cost only (paper Fig. 1 —
+                    # pure-insert loads pay lookups but relocate nothing)
+                    continue
+                # (2) relocate: re-put valid pairs (paper: 'via a put operation')
+                for le in live:
+                    self.stats.gc_relocations += 1
+                    self._write(le.key, le.value, tombstone=False, internal=True)
+                self.large_log.reclaim(seg.segment_id)
+                self._gc_region.pop(seg.offset, None)
+                reclaimed += 1
+        finally:
+            self._in_gc = False
+        return reclaimed
+
+    def _lookup_for_gc(self, key: bytes) -> IndexEntry | None:
+        e = self.l0.get(key)
+        if e is not None:
+            return e
+        for lvl in self.levels:
+            self.stats.index_probes += 1
+            base = _LEVEL_REGION * (lvl.index + 1)
+            block = base + (hash(key) % max(1, lvl.index_bytes)) // BLOCK * BLOCK
+            self.device.random_read(block, 1, kind="gc")
+            found = lvl.find(key)
+            if found is not None:
+                return found
+        return None
+
+    # --------------------------------------------------------- crash/recovery
+    def flush_all(self) -> None:
+        self.small_log.flush()
+        self.large_log.flush()
+        self.medium_log.flush()
+        for log in (self.small_log, self.large_log, self.medium_log):
+            if log.segments:
+                mx = max(
+                    (e.lsn for s in log.segments.values() for e in s.entries if e is not None),
+                    default=0,
+                )
+                self._durable[log.name] = mx
+
+    def crash(self) -> int:
+        """Drop volatile state: L0 and any log entries past the last group commit.
+
+        Returns the recovery cutoff LSN: the store recovers to the prefix of
+        writes with ``lsn <= cutoff`` (paper §3.4: a previous — not necessarily
+        the last — consistent point).  The cutoff is the largest LSN such that
+        *every* write at or below it survives in some durable location, which
+        with per-log group commit is ``min(first lost lsn per log) - 1``.
+        """
+        self.l0.clear()
+        self.l0_bytes = 0
+        first_lost = None
+        for log in (self.small_log, self.large_log):
+            cutoff = self._durable_lsn(log)
+            for seg in log.iter_segments():
+                for slot, e in enumerate(seg.entries):
+                    if e is not None and e.lsn > cutoff:
+                        if first_lost is None or e.lsn < first_lost:
+                            first_lost = e.lsn
+                        seg.entries[slot] = None
+                        seg.live_bytes -= e.size
+            log._unflushed = 0
+        self._recovery_cutoff = (first_lost - 1) if first_lost is not None else self.lsn
+        return self._recovery_cutoff
+
+    def _durable_lsn(self, log: Log) -> int:
+        """Entries beyond the last 256 KB chunk boundary are lost on crash."""
+        durable_bytes = log.appended_bytes - log._unflushed
+        last = 0
+        for seg in log.segments.values():
+            for e in seg.entries:
+                if e is not None and e.end_off <= durable_bytes:
+                    last = max(last, e.lsn)
+        return max(last, self._durable.get(log.name, 0))
+
+    def recover(self) -> None:
+        """Replay Small + Large logs in LSN order to rebuild L0 (paper §3.4).
+
+        Only LSNs up to the recovery cutoff are applied so the recovered state
+        is a consistent prefix of the write history.
+        """
+        cutoff = getattr(self, "_recovery_cutoff", self.lsn)
+        replay: list[tuple[int, LogEntry, Pointer | None]] = []
+        for seg in self.small_log.iter_segments():
+            for e in seg.entries:
+                if e is not None and self.compacted_lsn < e.lsn <= cutoff:
+                    replay.append((e.lsn, e, None))
+        for seg in self.large_log.iter_segments():
+            for slot, e in enumerate(seg.entries):
+                if e is not None and self.compacted_lsn < e.lsn <= cutoff:
+                    replay.append((e.lsn, e, Pointer(seg.segment_id, slot)))
+        replay.sort(key=lambda t: t[0])
+        self.l0.clear()
+        self.l0_bytes = 0
+        for lsn, le, ptr in replay:
+            self.device.random_read(lsn % (1 << 30), le.size, kind="get")
+            entry = IndexEntry(
+                key=le.key, lsn=lsn, category=le.category, tombstone=le.tombstone,
+                kv_size=len(le.key) + len(le.value),
+            )
+            if ptr is not None:
+                entry.ptr, entry.log = ptr, "large"
+            elif not le.tombstone:
+                entry.value = le.value
+            old = self.l0.get(le.key)
+            if old is not None:
+                self.l0_bytes -= old.logical_size()
+            self.l0[le.key] = entry
+            self.l0_bytes += entry.logical_size()
+            self.lsn = max(self.lsn, lsn)
+
+    # ------------------------------------------------------------------ misc
+    def amplification(self) -> float:
+        app = max(1, self.stats.app_bytes)
+        return self.device.stats.total / app
+
+    def space_bytes(self) -> int:
+        level_bytes = sum(l.index_bytes for l in self.levels)
+        log_bytes = self.small_log.total_bytes + self.medium_log.total_bytes + self.large_log.total_bytes
+        return level_bytes + log_bytes
+
+    def checkpoint_stats(self) -> dict:
+        return {
+            "amplification": self.amplification(),
+            "device_read": self.device.stats.bytes_read,
+            "device_written": self.device.stats.bytes_written,
+            "levels": [len(l) for l in self.levels],
+            "l0": len(self.l0),
+            "medium_log_segments": len(self.medium_log.segments),
+            "large_log_segments": len(self.large_log.segments),
+        }

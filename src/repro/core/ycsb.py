@@ -1,0 +1,149 @@
+"""YCSB workload generator (paper §4, Table 1).
+
+Key/value sizes follow the paper exactly: keys average 24 B; values are 9 B
+(small), 104 B (medium), 1004 B (large), giving p = 0.72 / 0.19 / 0.02 with a
+12 B prefix.  Mixes: S/M/L are single-size, SD/MD/LD are 60-20-20 dominant
+mixes.  Operation mixes follow standard YCSB:
+
+* Load A/E : 100% insert
+* Run A    : 50% update / 50% read
+* Run B    : 5% update / 95% read
+* Run C    : 100% read
+* Run D    : 5% insert / 95% read (latest distribution)
+* Run E    : 5% insert / 95% scan (short ranges)
+
+Key popularity is zipfian (theta 0.99) like YCSB's default.  The generator is
+deterministic given a seed and yields batched numpy arrays so benchmarks can
+drive millions of ops without Python-loop overhead in generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+KEY_SIZE = 24
+VALUE_SIZES = {"small": 9, "medium": 104, "large": 1004}
+
+MIXES = {  # name -> (small%, medium%, large%)
+    "S": (100, 0, 0),
+    "M": (0, 100, 0),
+    "L": (0, 0, 100),
+    "SD": (60, 20, 20),
+    "MD": (20, 60, 20),
+    "LD": (20, 20, 60),
+}
+
+OP_MIXES = {  # name -> dict(op -> fraction)
+    "load_a": {"insert": 1.0},
+    "load_e": {"insert": 1.0},
+    "run_a": {"update": 0.5, "read": 0.5},
+    "run_b": {"update": 0.05, "read": 0.95},
+    "run_c": {"read": 1.0},
+    "run_d": {"insert": 0.05, "read": 0.95},
+    "run_e": {"insert": 0.05, "scan": 0.95},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: str            # insert | update | read | scan
+    key: bytes
+    value_size: int = 0  # bytes (payload synthesized on demand)
+    scan_len: int = 0
+
+
+class ZipfGenerator:
+    """Bounded zipfian over [0, n) with YCSB's theta=0.99 (rejection-free CDF)."""
+
+    def __init__(self, n: int, theta: float = 0.99, seed: int = 0):
+        self.n = n
+        ranks = np.arange(1, n + 1, dtype=np.float64)
+        weights = 1.0 / np.power(ranks, theta)
+        self.cdf = np.cumsum(weights / weights.sum())
+        self.rng = np.random.default_rng(seed)
+        # shuffle rank->key mapping so hot keys are spread over the keyspace
+        self.perm = self.rng.permutation(n)
+
+    def sample(self, count: int) -> np.ndarray:
+        u = self.rng.random(count)
+        ranks = np.searchsorted(self.cdf, u)
+        return self.perm[ranks]
+
+
+def make_key(i: int) -> bytes:
+    return b"user" + str(i).zfill(KEY_SIZE - 4).encode()
+
+
+def _sizes_for(mix: str, rng: np.random.Generator, count: int) -> np.ndarray:
+    s, m, l = MIXES[mix]
+    cats = rng.choice(3, size=count, p=np.array([s, m, l]) / 100.0)
+    sizes = np.array([VALUE_SIZES["small"], VALUE_SIZES["medium"], VALUE_SIZES["large"]])
+    return sizes[cats]
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str            # e.g. 'load_a'
+    mix: str             # e.g. 'SD'
+    num_keys: int        # loaded keyspace size
+    num_ops: int         # operations to run (for run_* phases)
+    seed: int = 7
+    scan_len: int = 50
+
+    def load_ops(self) -> Iterator[Op]:
+        """The load phase: insert every key once, sizes drawn from the mix."""
+        rng = np.random.default_rng(self.seed)
+        sizes = _sizes_for(self.mix, rng, self.num_keys)
+        order = rng.permutation(self.num_keys)
+        for i in order:
+            yield Op("insert", make_key(int(i)), int(sizes[i]))
+
+    def run_ops(self) -> Iterator[Op]:
+        rng = np.random.default_rng(self.seed + 1)
+        zipf = ZipfGenerator(self.num_keys, seed=self.seed + 2)
+        opmix = OP_MIXES[self.name]
+        kinds = list(opmix.keys())
+        probs = np.array([opmix[k] for k in kinds])
+        choices = rng.choice(len(kinds), size=self.num_ops, p=probs)
+        keys = zipf.sample(self.num_ops)
+        sizes = _sizes_for(self.mix, rng, self.num_ops)
+        next_insert = self.num_keys
+        for c, k, sz in zip(choices, keys, sizes):
+            kind = kinds[c]
+            if kind == "insert":
+                yield Op("insert", make_key(next_insert), int(sz))
+                next_insert += 1
+            elif kind == "update":
+                yield Op("update", make_key(int(k)), int(sz))
+            elif kind == "read":
+                yield Op("read", make_key(int(k)))
+            else:
+                yield Op("scan", make_key(int(k)), scan_len=self.scan_len)
+
+
+_PAYLOAD = bytes(range(256)) * 8  # 2 KB of deterministic filler
+
+
+def payload(size: int) -> bytes:
+    return _PAYLOAD[:size]
+
+
+def execute(store, ops: Iterator[Op], gc_every: int = 0) -> dict:
+    """Drive a store through an op stream; returns op counts."""
+    counts = {"insert": 0, "update": 0, "read": 0, "scan": 0}
+    for n, op in enumerate(ops, 1):
+        if op.kind == "insert":
+            store.put(op.key, payload(op.value_size))
+        elif op.kind == "update":
+            store.update(op.key, payload(op.value_size))
+        elif op.kind == "read":
+            store.get(op.key)
+        else:
+            store.scan(op.key, op.scan_len)
+        counts[op.kind] += 1
+        if gc_every and n % gc_every == 0:
+            store.gc_tick()
+    store.gc_tick()
+    return counts

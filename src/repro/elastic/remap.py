@@ -1,0 +1,113 @@
+"""Elastic mesh remapping + straggler policy (1000+-node posture).
+
+Node failure / elastic resize: because checkpoints are keyed by tensor path
+(not device), recovery onto a different topology is *metadata only*:
+
+    1. ``shrink_mesh`` picks the largest (data', model') grid that fits the
+       surviving device count while keeping the TP (`model`) axis intact when
+       possible — TP resharding moves weights, DP resharding doesn't.
+    2. ``plan_reshard`` re-derives NamedShardings under the new mesh from the
+       same rules, so ``CheckpointManager.restore`` re-places shards.
+    3. The data pipeline is counter-based (repro.data), so the new host set
+       resumes at the checkpointed step with no data-order coordination.
+
+Straggler mitigation: ``StragglerPolicy`` tracks per-host step latencies
+(EWMA) and flags hosts slower than ``threshold`` x median; flagged hosts get
+their microbatches redistributed (the runner shrinks their slice of the
+global batch — works because the pipeline is counter-addressed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.sharding import rules
+
+
+def shrink_mesh(total_devices: int, *, prefer_model: int = 16, devices=None):
+    """Largest (data, model) mesh fitting `total_devices` with model<=prefer."""
+    model = prefer_model
+    while model > 1 and (total_devices % model or total_devices < model):
+        model //= 2
+    data = total_devices // model
+    devs = (devices or jax.devices())[: data * model]
+    import numpy as _np
+
+    arr = _np.array(devs).reshape(data, model)
+    from jax.sharding import Mesh
+
+    return Mesh(arr, ("data", "model"))
+
+
+def plan_reshard(cfg, old_mesh, new_mesh, params_shape):
+    """New shardings after failure; returns (new_shardings, moved_fraction).
+
+    moved_fraction estimates the fraction of parameter bytes whose placement
+    changes (0 when only the data axis shrinks — pure DP elasticity).
+    """
+    new_shard = rules.param_shardings(cfg, new_mesh, params_shape)
+    old_spec = rules.param_specs(cfg, old_mesh, params_shape)
+    new_spec = rules.param_specs(cfg, new_mesh, params_shape)
+    moved = 0
+    total = 0
+    for o, n, leaf in zip(
+        jax.tree.leaves(old_spec, is_leaf=_is_spec),
+        jax.tree.leaves(new_spec, is_leaf=_is_spec),
+        jax.tree.leaves(params_shape),
+    ):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        total += nbytes
+        if _model_part(o) != _model_part(n):
+            moved += nbytes
+    return new_shard, moved / max(total, 1)
+
+
+def _is_spec(x):
+    from jax.sharding import PartitionSpec
+
+    return isinstance(x, PartitionSpec)
+
+
+def _model_part(spec):
+    return tuple("model" if p == "model" else None for p in spec)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 1.5       # x median latency
+    ewma: float = 0.3
+    min_samples: int = 3
+
+    def __post_init__(self):
+        self._lat: dict[int, float] = {}
+        self._n: dict[int, int] = {}
+
+    def observe(self, host: int, seconds: float) -> None:
+        prev = self._lat.get(host)
+        self._lat[host] = seconds if prev is None else (1 - self.ewma) * prev + self.ewma * seconds
+        self._n[host] = self._n.get(host, 0) + 1
+
+    def stragglers(self) -> list[int]:
+        ready = {h: l for h, l in self._lat.items() if self._n[h] >= self.min_samples}
+        if len(ready) < 2:
+            return []
+        med = float(np.median(list(ready.values())))
+        return [h for h, l in ready.items() if l > self.threshold * med]
+
+    def rebalance(self, global_batch: int, hosts: list[int]) -> dict[int, int]:
+        """Per-host microbatch allocation with stragglers down-weighted 2x."""
+        slow = set(self.stragglers())
+        weights = {h: (0.5 if h in slow else 1.0) for h in hosts}
+        wsum = sum(weights.values())
+        alloc = {h: max(1, int(global_batch * w / wsum)) for h, w in weights.items()}
+        # fix rounding so totals match
+        drift = global_batch - sum(alloc.values())
+        fast = [h for h in hosts if h not in slow] or hosts
+        i = 0
+        while drift != 0:
+            alloc[fast[i % len(fast)]] += 1 if drift > 0 else -1
+            drift += -1 if drift > 0 else 1
+            i += 1
+        return alloc

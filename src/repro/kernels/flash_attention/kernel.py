@@ -1,0 +1,119 @@
+"""Pallas TPU causal GQA flash attention (online softmax, VMEM tiling).
+
+Grid layout: ``(B, H, num_q_blocks, num_kv_blocks)`` with the kv dimension
+innermost.  TPU executes the grid sequentially per core, so fp32 VMEM scratch
+(running max ``m``, normalizer ``l``, accumulator ``acc``) persists across kv
+iterations of one q block — the classic flash recurrence:
+
+    m'   = max(m, rowmax(s))
+    l'   = l * exp(m - m') + rowsum(exp(s - m'))
+    acc' = acc * exp(m - m') + exp(s - m') @ v
+
+BlockSpecs keep one (BQ, D) q tile and one (BK, D) k/v tile in VMEM; the GQA
+mapping happens in the k/v index_map (``h // group``), so no k/v duplication
+is materialized.  Block sizes default to MXU-aligned 128/256 for D=128 heads.
+Fully-masked kv blocks (ki > qi for causal) are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, scale, window, seq_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal: kv block strictly after the q block contributes nothing
+    needed = k_start <= q_start + bq - 1
+    if window:
+        needed &= k_start + bk - 1 >= q_start - window + 1
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)         # (BQ, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (BK, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (BQ, BK)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "window", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, K, D)
+    v: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    grid = (b, h, s // bq, s // bk)
+
+    kernel = functools.partial(
+        _fa_kernel, bq=bq, bk=bk, scale=d**-0.5, window=window, seq_len=s
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // group, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _scratch((bq, 1)),
+            _scratch((bq, 1)),
+            _scratch((bq, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: dispatches flash attention to Pallas (TPU) or the oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, *, window: int = 0, impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from .kernel import flash_attention_pallas
+
+        interpret = jax.default_backend() != "tpu"
+        return flash_attention_pallas(
+            q, k, v, window=window, block_q=block_q, block_k=block_k, interpret=interpret
+        )
+    return flash_attention_ref(q, k, v, window=window)

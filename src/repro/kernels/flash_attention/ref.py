@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, K, D)
+    v: jax.Array,  # (B, S, K, D)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    qg = q.reshape(b, sq, kh, group, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * d**-0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)

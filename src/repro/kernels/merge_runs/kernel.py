@@ -1,0 +1,91 @@
+"""Pallas TPU bitonic merge of two sorted runs (LSM compaction hot loop).
+
+Hardware adaptation (DESIGN.md §2.3): the paper's compaction merge is a
+pointer-walking two-finger merge — branchy, scalar, hostile to TPU vector
+units.  The TPU-native equivalent: concatenate run A (ascending) with run B
+*reversed* (descending) to form a bitonic sequence of length 2T, then run the
+log2(2T)-stage bitonic **merge network**.  Every stage is a reshape +
+element-wise min/max — no gathers, no data-dependent control flow, perfectly
+mapped to the VPU's (8, 128) lanes.  Payloads co-move via select on the key
+comparison.
+
+Grid: one program per row-group of tiles; each program holds its
+(BG, 2T) working set in VMEM.  T must be a power of two (the ops.py wrapper
+pads); keys int32/uint32/float32, payload any 32-bit dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_stage(keys: jax.Array, vals: jax.Array, stride: int):
+    """One bitonic-merge compare-exchange stage at the given stride.
+
+    keys/vals: (BG, N).  Reshape to (BG, N/(2*stride), 2, stride) and
+    min/max along the 2-axis — the vectorized form of `compare with partner
+    idx XOR stride`.
+    """
+    bg, n = keys.shape
+    k4 = keys.reshape(bg, n // (2 * stride), 2, stride)
+    v4 = vals.reshape(bg, n // (2 * stride), 2, stride)
+    lo_k, hi_k = k4[:, :, 0], k4[:, :, 1]
+    lo_v, hi_v = v4[:, :, 0], v4[:, :, 1]
+    swap = lo_k > hi_k
+    nlo_k = jnp.where(swap, hi_k, lo_k)
+    nhi_k = jnp.where(swap, lo_k, hi_k)
+    nlo_v = jnp.where(swap, hi_v, lo_v)
+    nhi_v = jnp.where(swap, lo_v, hi_v)
+    keys = jnp.stack([nlo_k, nhi_k], axis=2).reshape(bg, n)
+    vals = jnp.stack([nlo_v, nhi_v], axis=2).reshape(bg, n)
+    return keys, vals
+
+
+def _merge_kernel(ak_ref, bk_ref, av_ref, bv_ref, ok_ref, ov_ref, *, tile: int):
+    ak = ak_ref[...]
+    av = av_ref[...]
+    # reverse B to form a bitonic sequence [A asc | B desc]
+    bk = jax.lax.rev(bk_ref[...], (1,))
+    bv = jax.lax.rev(bv_ref[...], (1,))
+    keys = jnp.concatenate([ak, bk], axis=1)
+    vals = jnp.concatenate([av, bv], axis=1)
+    stride = tile
+    while stride >= 1:
+        keys, vals = _merge_stage(keys, vals, stride)
+        stride //= 2
+    ok_ref[...] = keys
+    ov_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def merge_runs_pallas(
+    a_keys: jax.Array,  # (G, T) ascending rows, T a power of two
+    b_keys: jax.Array,
+    a_vals: jax.Array,
+    b_vals: jax.Array,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    g, t = a_keys.shape
+    assert t & (t - 1) == 0, f"tile width must be a power of two, got {t}"
+    bg = min(block_rows, g)
+    assert g % bg == 0, (g, bg)
+    grid = (g // bg,)
+    kernel = functools.partial(_merge_kernel, tile=t)
+    in_spec = pl.BlockSpec((bg, t), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((bg, 2 * t), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, 2 * t), a_keys.dtype),
+            jax.ShapeDtypeStruct((g, 2 * t), a_vals.dtype),
+        ],
+        interpret=interpret,
+    )(a_keys, b_keys, a_vals, b_vals)

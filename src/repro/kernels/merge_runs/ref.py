@@ -1,0 +1,26 @@
+"""Oracle for the compaction merge kernel: jnp sort of the concatenation.
+
+Stable w.r.t. run order is not required — Parallax merges runs of *unique*
+keys per level and resolves collisions by LSN before the byte-level merge, so
+the kernel contract is: given two ascending (G, T) key tiles with payloads,
+produce the ascending (G, 2T) merged keys + co-sorted payloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_runs_ref(
+    a_keys: jax.Array,   # (G, T) ascending per row
+    b_keys: jax.Array,   # (G, T) ascending per row
+    a_vals: jax.Array,   # (G, T) payload (e.g. pointer/index)
+    b_vals: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    keys = jnp.concatenate([a_keys, b_keys], axis=1)
+    vals = jnp.concatenate([a_vals, b_vals], axis=1)
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return (
+        jnp.take_along_axis(keys, order, axis=1),
+        jnp.take_along_axis(vals, order, axis=1),
+    )

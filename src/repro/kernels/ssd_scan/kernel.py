@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: ``(B, H, num_chunks)`` with the chunk dimension innermost.  TPU grids
+execute sequentially per core, so the recurrent state (P, N) lives in fp32
+VMEM scratch and is carried across chunk iterations of one (batch, head)
+pair — no HBM round-trip for the recurrence.  Per chunk the kernel computes:
+
+    intra  = tril(C B^T ∘ exp(cum_l - cum_s)) (dt x)
+    y      = intra + exp(cum) * (C . state_in)
+    state  = exp(cum_L) * state_in + sum_s exp(cum_L - cum_s) dt_s B_s x_s^T
+
+BlockSpecs keep one chunk of x (L, P), B/C (L, N) and dt (L,) in VMEM; the
+(L, L) decay matrix is built in-register.  L defaults to 128/256 (MXU-
+aligned); P=64, N=64/128 per the assigned SSM configs.
+
+The GQA-like group mapping for B/C (``h // (H // G)``) happens in the
+index_map, mirroring the flash-attention kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_ref, *, L, P, N):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    a = a_ref[0].astype(jnp.float32)                 # scalar decay for this head
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # (L, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # (L, N)
+
+    da = dt * a                                      # (L,)
+    cum = jnp.cumsum(da)                             # inclusive (L,)
+    dtx = dt[:, None] * x                            # (L, P)
+
+    # intra-chunk quadratic form with decay mask
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))          # (L, L)
+    decay = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # mask before exp (upper triangle is positive -> overflow; see ref.py)
+    w = jnp.exp(jnp.where(li >= si, decay, -1e30))
+    y = jax.lax.dot(scores * w, dtx)                                      # (L, P)
+
+    # inter-chunk: inject state entering this chunk
+    state_in = state_ref[...]                                             # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state_in, (((1,), (1,)), ((), ()))
+    )                                                                     # (L,P)
+
+    # state update: decay + outer-product accumulation
+    persist = jnp.exp(cum[-1] - cum)                                      # (L,)
+    contrib = jax.lax.dot_general(dtx * persist[:, None], b, (((0,), (0,)), ((), ())))  # (P,N)
+    state_ref[...] = state_in * jnp.exp(cum[-1]) + contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_ref[0, 0, :, :] = state_ref[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)
+    a: jax.Array,     # (H,)
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b_, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    rep = h // g
+    grid = (b_, h, nc)
+    kernel = functools.partial(_ssd_kernel, L=L, P=p, N=n)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, L, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, L, 1, n), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1, L, 1, n), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b_, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), a.astype(jnp.float32), bmat, cmat)
+    return y, st

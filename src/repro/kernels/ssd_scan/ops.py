@@ -1,0 +1,23 @@
+"""Jit'd dispatcher for the SSD chunked scan.
+
+Chooses the Pallas TPU kernel on TPU backends (or when forced via
+``impl='pallas'`` — interpret mode on CPU for validation) and the pure-jnp
+reference otherwise.  The models always call this entry point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk: int = 256, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from .kernel import ssd_scan_pallas
+
+        interpret = jax.default_backend() != "tpu"
+        return ssd_scan_pallas(x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret)
+    return ssd_scan_ref(x, dt, a, bmat, cmat, chunk=chunk)

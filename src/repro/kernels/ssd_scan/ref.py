@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan.
+
+Math (arXiv:2405.21060, SSD): per head h with scalar decay ``a_h < 0``:
+
+    state_t = exp(a_h * dt_t) * state_{t-1} + dt_t * B_t x_t^T
+    y_t     = C_t . state_t
+
+computed chunk-parallel: intra-chunk via the (L, L) decay-masked quadratic
+form, inter-chunk via a sequential scan over per-chunk states.  This file is
+the correctness oracle for the Pallas kernel and the XLA fallback used when
+lowering on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H) float32
+    a: jax.Array,      # (H,) float32, negative
+    bmat: jax.Array,   # (B, S, G, N)
+    cmat: jax.Array,   # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    L = min(chunk, s)
+    if s % L:
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    spad = x.shape[1]
+    nc = spad // L
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(cmat, rep, axis=2)
+
+    f32 = jnp.float32
+    dtf = dt.astype(f32)
+    da = dtf * a.astype(f32)[None, None, :]                 # (B,S,H)
+    dtx = (dtf[..., None] * x.astype(f32))                  # (B,S,H,P)
+
+    # chunked views
+    da_c = da.reshape(b, nc, L, h)
+    cum = jnp.cumsum(da_c, axis=2)                          # inclusive
+    dtx_c = dtx.reshape(b, nc, L, h, p)
+    b_c = bh.reshape(b, nc, L, h, n).astype(f32)
+    c_c = ch.reshape(b, nc, L, h, n).astype(f32)
+
+    # ---- intra-chunk quadratic form
+    scores = jnp.einsum("bclhn,bcshn->bchls", c_c, b_c)     # (B,nc,H,L,L)
+    cum_h = cum.transpose(0, 1, 3, 2)                       # (B,nc,H,L)
+    decay = cum_h[:, :, :, :, None] - cum_h[:, :, :, None, :]  # cum_l - cum_s
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: upper-triangle decay is positive and exp overflows;
+    # where(mask, exp(x), 0) would leak NaN into the cotangent (0 * inf)
+    decay = jnp.where(mask[None, None, None], decay, -1e30)
+    w = jnp.exp(decay)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", scores * w, dtx_c)
+
+    # ---- per-chunk states and sequential carry
+    last = cum[:, :, -1:, :]                                # (B,nc,1,H)
+    persist = jnp.exp(last - cum)                           # (B,nc,L,H)
+    chunk_states = jnp.einsum("bclh,bclhp,bclhn->bchpn", persist, dtx_c, b_c)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                 # (B,nc,H)
+
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), f32)
+    )
+
+    def step(carry, inp):
+        cs, cd = inp                                        # (B,H,P,N), (B,H)
+        new = carry * cd[..., None, None] + cs
+        return new, carry                                   # emit state ENTERING the chunk
+
+    final, entering = jax.lax.scan(
+        step,
+        s0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp", jnp.exp(cum), c_c, entering)
+
+    y = (y_intra + y_inter).reshape(b, spad, h, p)[:, :s]
+    return y, final
+
+
+def ssd_reference_sequential(x, dt, a, bmat, cmat, initial_state=None):
+    """O(S) sequential oracle-of-the-oracle (tests only; tiny shapes)."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    state = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(a.astype(jnp.float32)[None, :] * dtf[:, t])        # (B,H)
+        dx = dtf[:, t, :, None] * x[:, t].astype(jnp.float32)              # (B,H,P)
+        state = state * decay[..., None, None] + dx[..., None] * bh[:, t, :, None, :]
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, ch[:, t]))
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init).  For every cell this script:
+
+    1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+    2. pads the arch config for the mesh (head/vocab divisibility),
+    3. constructs abstract params / optimizer / cache / batch with shardings,
+    4. ``jax.jit(step).lower(...).compile()`` — sharding or memory bugs fail
+       here exactly as they would on real hardware,
+    5. records memory_analysis / cost_analysis / collective bytes into a JSON
+       row for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh both
+    python -m repro.launch.dryrun --all --mesh single --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable
+from repro.data.pipeline import batch_struct
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train import step as step_lib
+
+
+def _attach(shardings, tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), tree, shardings
+    )
+
+
+def input_specs(cfg, shape_spec, mesh, layout: str = "baseline"):
+    """ShapeDtypeStruct stand-ins (weak-type correct, shardable, no alloc)."""
+    b = batch_struct(cfg, shape_spec.seq_len, shape_spec.global_batch)
+    specs = rules.batch_specs(cfg, mesh, b, layout)
+    shardings = rules.to_shardings(mesh, specs)
+    return _attach(shardings, b)
+
+
+def lower_cell(arch: str, shape: str, mesh, *, donate: bool = True, layout: str = "baseline", grad_dtype: str = "float32", remat: bool = True, zero1: bool = False):
+    """Returns (lowered, cfg, meta) for one cell on `mesh`."""
+    spec = SHAPES[shape]
+    cfg = rules.pad_config_for_mesh(ARCHS[arch], mesh, layout)
+    if not remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    params_shape = step_lib.abstract_params(cfg)
+    pshard = rules.param_shardings(cfg, mesh, params_shape, layout)
+    abstract_p = _attach(pshard, params_shape)
+    repl = NamedSharding(mesh, P())
+
+    if True:  # NamedShardings carry the mesh; no ambient mesh context needed
+        if spec.step == "train":
+            ocfg = adamw.AdamWConfig()
+            fn = step_lib.make_train_fn(cfg, ocfg, grad_dtype=grad_dtype)
+            opt_shape = step_lib.abstract_opt_state(params_shape)
+            if zero1:
+                # ZeRO-1: optimizer states sharded over the data axes even
+                # when params are replicated (grad RS + param AG per step)
+                zshard = rules.param_shardings(cfg, mesh, params_shape, "dp-only")
+                oshard = {"mu": zshard, "nu": zshard, "step": repl}
+            else:
+                oshard = {"mu": pshard, "nu": pshard, "step": repl}
+            abstract_o = _attach(oshard, opt_shape)
+            batch = input_specs(cfg, spec, mesh, layout)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pshard, oshard, None),
+                out_shardings=(pshard, oshard, repl),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(abstract_p, abstract_o, batch)
+        elif spec.step == "prefill":
+            fn = step_lib.make_prefill_fn(cfg, max_len=spec.seq_len)
+            batch = input_specs(cfg, spec, mesh, layout)
+            batch.pop("labels", None)
+            cache_shape = step_lib.abstract_cache(cfg, spec.global_batch, spec.seq_len)
+            cshard = rules.to_shardings(mesh, rules.cache_specs(cfg, mesh, cache_shape, layout))
+            jitted = jax.jit(fn, in_shardings=(pshard, None), out_shardings=(None, cshard))
+            lowered = jitted.lower(abstract_p, batch)
+        else:  # decode
+            fn = step_lib.make_decode_fn(cfg)
+            cache_shape = step_lib.abstract_cache(cfg, spec.global_batch, spec.seq_len)
+            cshard = rules.to_shardings(mesh, rules.cache_specs(cfg, mesh, cache_shape, layout))
+            abstract_c = _attach(cshard, cache_shape)
+            tok_shard = rules.to_shardings(
+                mesh, rules.batch_specs(cfg, mesh, {"tokens": jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)}, layout)
+            )["tokens"]
+            toks = jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32, sharding=tok_shard)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pshard, cshard, tok_shard),
+                out_shardings=(tok_shard, cshard),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(abstract_p, abstract_c, toks)
+    return lowered, cfg, spec
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, layout: str = "baseline", grad_dtype: str = "float32", remat: bool = True, zero1: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    row = {"arch": arch, "shape": shape, "mesh": mesh_kind, "devices": mesh.size,
+           "layout": layout, "grad_dtype": grad_dtype, "remat": remat, "zero1": zero1}
+    if not applicable(arch, shape):
+        row["status"] = "skipped"
+        row["reason"] = "full-attention arch: long_500k inapplicable (DESIGN.md)"
+        return row
+    t0 = time.time()
+    try:
+        lowered, cfg, spec = lower_cell(arch, shape, mesh, layout=layout, grad_dtype=grad_dtype, remat=remat, zero1=zero1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        rl = roofline.analyze(
+            compiled, cfg=cfg, spec=spec, mesh=mesh, layout=layout,
+            grad_bytes=2 if grad_dtype == "bfloat16" else 4,
+            model_flops=roofline.model_flops_for(cfg, spec),
+        )
+        row.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0),
+            },
+            roofline=dataclasses.asdict(rl),
+        )
+    except Exception as e:  # a failure here is a sharding/memory bug
+        row["status"] = "FAIL"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-2000:]
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--layout", choices=["baseline", "dp-only", "replicated-weights", "pure-dp"], default="baseline")
+    ap.add_argument("--grad-dtype", choices=["float32", "bfloat16"], default="float32")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    rows = []
+    for arch, shape in cells:
+        for mk in meshes:
+            row = run_cell(arch, shape, mk, layout=args.layout, grad_dtype=args.grad_dtype, remat=not args.no_remat, zero1=args.zero1)
+            rows.append(row)
+            rl = row.get("roofline", {})
+            print(
+                f"[{row['status']:7s}] {arch:20s} {shape:12s} {mk:6s} "
+                f"compile={row.get('compile_s', '-'):>7}s "
+                f"bottleneck={rl.get('bottleneck', '-'):10s} "
+                f"terms(ms)=c{1e3*rl.get('compute_s', 0):.1f}/m{1e3*rl.get('memory_s', 0):.1f}/x{1e3*rl.get('collective_s', 0):.1f}",
+                flush=True,
+            )
+            if row["status"] == "FAIL":
+                print(row["error"], flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+            keys = {(r["arch"], r["shape"], r["mesh"], r.get("layout", "baseline"), r.get("grad_dtype", "float32")) for r in rows}
+            existing = [r for r in existing if (r["arch"], r["shape"], r["mesh"], r.get("layout", "baseline"), r.get("grad_dtype", "float32")) not in keys]
+        with open(args.out, "w") as f:
+            json.dump(existing + rows, f, indent=1)
+        print(f"wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

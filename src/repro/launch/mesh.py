@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run entry
+point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before
+any jax import to materialize the placeholder devices.
+
+Mesh shapes (TPU v5e pods):
+    single-pod:  (16, 16)      axes ("data", "model")   — 256 chips
+    multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many devices this host has (tests/examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

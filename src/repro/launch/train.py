@@ -1,0 +1,90 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+On this CPU container it runs reduced configs end-to-end (data pipeline ->
+sharded step -> LSM checkpointing -> resume).  On a real TPU slice the same
+entry point runs the full config: the mesh comes from ``--mesh production``
+(16x16 per pod) and jax.distributed handles multi-host.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, host_batch
+from repro.elastic.remap import StragglerPolicy
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import get_model
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train.step import make_train_fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced config (CPU); full config needs TPUs")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["host", "production", "multipod"], default="host")
+    ap.add_argument("--layout", choices=list(rules.LAYOUTS), default="baseline")
+    ap.add_argument("--grad-dtype", choices=["float32", "bfloat16"], default="float32")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    cfg = rules.pad_config_for_mesh(cfg, mesh, args.layout)
+
+    model = get_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                             total_steps=args.steps)
+    step_fn = jax.jit(make_train_fn(cfg, ocfg, grad_dtype=args.grad_dtype),
+                      donate_argnums=(0, 1))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch)
+    mgr = CheckpointManager(args.ckpt_dir, consolidate_every=4) if args.ckpt_dir else None
+    straggler = StragglerPolicy()
+
+    start = 0
+    if args.resume and mgr is not None:
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            {"params": params, "opt": opt})
+        restored, start = mgr.restore(like)
+        params, opt = restored["params"], restored["opt"]
+        print(f"resumed at step {start}")
+
+    n = sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M mesh={dict(mesh.shape)} layout={args.layout}")
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in host_batch(cfg, dcfg, step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        straggler.observe(jax.process_index(), time.time() - t0)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} {(time.time()-t0)*1e3:.0f}ms", flush=True)
+        if mgr is not None and step and step % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

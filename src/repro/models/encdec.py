@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv/mel frontend is a **stub**: ``input_specs``
+provides precomputed frame embeddings (B, frames, d_model).  The rest is the
+real architecture: sinusoidal encoder positions, learned decoder positions,
+pre-LayerNorm blocks with GELU MLPs, decoder causal self-attention +
+cross-attention over the encoder output.  No RoPE (whisper uses absolute
+positions).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    Params,
+    _dtype,
+    _project_qkv,
+    _sdpa,
+    attention_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    sinusoid_positions,
+)
+
+MAX_DECODER_POS = 65536  # learned decoder positions (covers the 32k shapes)
+
+
+def _enc_layer_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layernorm_init(cfg.d_model, dt),
+        "ln2": layernorm_init(cfg.d_model, dt),
+        "attn": attention_init(cfg, ks[0]),
+        "mlp": gelu_mlp_init(cfg.d_model, cfg.d_ff, dt, ks[1]),
+    }
+
+
+def _dec_layer_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model, dt),
+        "lnx": layernorm_init(cfg.d_model, dt),
+        "ln2": layernorm_init(cfg.d_model, dt),
+        "self_attn": attention_init(cfg, ks[0]),
+        "cross_attn": attention_init(cfg, ks[1]),
+        "mlp": gelu_mlp_init(cfg.d_model, cfg.d_ff, dt, ks[2]),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embedding": {
+            "embed": jax.random.normal(ks[2], (cfg.vocab_padded, cfg.d_model), dt) * 0.02,
+        },
+        "dec_pos": jax.random.normal(ks[3], (MAX_DECODER_POS, cfg.d_model), dt) * 0.01,
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(cfg, k))(dec_keys),
+        "enc_norm": layernorm_init(cfg.d_model, dt),
+        "dec_norm": layernorm_init(cfg.d_model, dt),
+    }
+
+
+# ------------------------------------------------------------------ encoder
+def encode(cfg: ArchConfig, params: Params, frame_embeds: jax.Array) -> jax.Array:
+    cd = _dtype(cfg.compute_dtype)
+    f = frame_embeds.shape[1]
+    x = frame_embeds.astype(cd) + sinusoid_positions(f, cfg.d_model).astype(cd)[None]
+
+    def body(x, lp):
+        xn = layernorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, lp["attn"], xn, None)
+        h = _sdpa(cfg, q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", h, lp["attn"]["wo"].astype(cd))
+        x = x + gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ decoder
+def _dec_body(cfg: ArchConfig, lp: Params, x: jax.Array, enc_kv: tuple[jax.Array, jax.Array]):
+    cd = _dtype(cfg.compute_dtype)
+    xn = layernorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, lp["self_attn"], xn, None)
+    h = _sdpa(cfg, q, k, v, causal=True)
+    x = x + jnp.einsum("bshk,hkd->bsd", h, lp["self_attn"]["wo"].astype(cd))
+    xn = layernorm(lp["lnx"], x, cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"].astype(cd))
+    hx = _sdpa(cfg, qx, enc_kv[0], enc_kv[1], causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", hx, lp["cross_attn"]["wo"].astype(cd))
+    x = x + gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+    return x
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict[str, Any]) -> tuple[jax.Array, jax.Array]:
+    cd = _dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = jnp.take(params["embedding"]["embed"], tokens, axis=0).astype(cd)
+    x = x + params["dec_pos"][:s].astype(cd)[None]
+
+    def body(x, lp):
+        kx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wk"].astype(cd))
+        vx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wv"].astype(cd))
+        return _dec_body(cfg, lp, x, (kx, vx)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"]["embed"].astype(cd))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict[str, Any]) -> jax.Array:
+    logits, _ = forward(cfg, params, batch)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((logz - gold) * mask).sum() / jnp.clip(mask.sum(), 1.0)
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: dict[str, Any], max_len: int):
+    cd = _dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embedding"]["embed"], tokens, axis=0).astype(cd)
+    x = x + params["dec_pos"][:s].astype(cd)[None]
+    cache = init_cache(cfg, b, max_len, cd)
+
+    def body(x, lp):
+        kx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wk"].astype(cd))
+        vx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wv"].astype(cd))
+        xn = layernorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, lp["self_attn"], xn, None)
+        h = _sdpa(cfg, q, k, v, causal=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", h, lp["self_attn"]["wo"].astype(cd))
+        xn = layernorm(lp["lnx"], x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"].astype(cd))
+        hx = _sdpa(cfg, qx, kx, vx, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", hx, lp["cross_attn"]["wo"].astype(cd))
+        x = x + gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+        return x, (k, v, kx, vx)
+
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, params["dec_layers"])
+    pad = max_len - s
+    cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cd)
+    cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cd)
+    cache["cross_k"], cache["cross_v"] = kxs, vxs
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embedding"]["embed"].astype(cd))
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens: jax.Array):
+    """One-token decode; cross K/V comes precomputed from prefill."""
+    cd = _dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embedding"]["embed"], tokens, axis=0).astype(cd)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(cd)[None, 0]
+
+    def body(x, inp):
+        lp, kci, vci, kx, vx = inp
+        xn = layernorm(lp["ln1"], x, cfg.norm_eps)
+        q, k_new, v_new = _project_qkv(cfg, lp["self_attn"], xn, None)
+        kci = jax.lax.dynamic_update_slice(kci, k_new.astype(kci.dtype), (0, pos, 0, 0))
+        vci = jax.lax.dynamic_update_slice(vci, v_new.astype(vci.dtype), (0, pos, 0, 0))
+        h = _sdpa(cfg, q, kci.astype(cd), vci.astype(cd), causal=True, q_offset=pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", h, lp["self_attn"]["wo"].astype(cd))
+        xn = layernorm(lp["lnx"], x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"].astype(cd))
+        hx = _sdpa(cfg, qx, kx.astype(cd), vx.astype(cd), causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", hx, lp["cross_attn"]["wo"].astype(cd))
+        x = x + gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+        return x, (kci, vci)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"])
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"], new_cache["pos"] = nk, nv, pos + 1
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"]["embed"].astype(cd))
+    return logits, new_cache

@@ -1,0 +1,278 @@
+"""Shared neural layers: norms, RoPE, GQA attention (with KV cache), SwiGLU.
+
+All layers are pure functions over explicit param pytrees.  Param creation
+(`*_init`) and application are separated so the distribution layer can build
+abstract params via ``jax.eval_shape`` and shard them with NamedSharding
+without ever materializing full-size weights on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Params = dict[str, Any]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def gelu_mlp_init(d_model: int, d_ff: int, dtype, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": jax.random.normal(ks[0], (d_model, d_ff), dtype) * d_model**-0.5,
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": jax.random.normal(ks[1], (d_ff, d_model), dtype) * d_ff**-0.5,
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    cd = _dtype(compute_dtype)
+    x = x.astype(cd)
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(cd)) + p["bi"].astype(cd))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cd)) + p["bo"].astype(cd)
+
+
+def sinusoid_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (length, dim), float32."""
+    half = dim // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / (half - 1)))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def attention_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p: Params = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), dt) * scale,
+        "wk": jax.random.normal(ks[1], (d, k, hd), dt) * scale,
+        "wv": jax.random.normal(ks[2], (d, k, hd), dt) * scale,
+        "wo": jax.random.normal(ks[3], (h, hd, d), dt) * scale,
+    }
+    if cfg.orig_num_heads and cfg.orig_num_heads < h:
+        # TP head padding: padded q heads are exact zeros (contribute nothing)
+        mask = (jnp.arange(h) < cfg.orig_num_heads).astype(dt)
+        p["wq"] = p["wq"] * mask[None, :, None]
+        p["wo"] = p["wo"] * mask[:, None, None]
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((k, hd), dt)
+        p["bv"] = jnp.zeros((k, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: Params, x: jax.Array, positions: jax.Array):
+    cd = _dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:
+        cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def kv_head_map(num_q_heads: int, num_kv_heads: int, orig_q_heads: int = 0):
+    """Constant q-head -> kv-head index map.
+
+    Divisibility-free GQA: instead of the (H -> K, group) reshape (which
+    requires H % K == 0 and breaks under TP head padding), each q head gathers
+    its kv head through this map.  Padded q heads (>= orig_q_heads, added for
+    16-way TP divisibility with zeroed wq/wo) map to kv head 0.
+    """
+    import numpy as np
+
+    oq = orig_q_heads or num_q_heads
+    group = max(1, oq // num_kv_heads)
+    m = np.minimum(np.arange(num_q_heads) // group, num_kv_heads - 1)
+    return jnp.asarray(m, jnp.int32)
+
+
+def _sdpa(cfg: ArchConfig, q, k, v, *, causal: bool, q_offset=0, window: int = 0):
+    """Grouped-query scaled dot-product attention (XLA path).
+
+    q: (B,Sq,H,D), k/v: (B,Skv,K,D).  ``q_offset`` is the absolute position of
+    q[...,0] for causal masking against a longer k/v (decode).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    kvm = kv_head_map(h, kh, getattr(cfg, "orig_num_heads", 0))
+    kr = k[:, :, kvm, :]  # (B,Skv,H,D); gather is sharded on H under SPMD
+    vr = v[:, :, kvm, :]
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, kr).astype(jnp.float32)
+    logits *= d ** -0.5
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, vr)
+
+
+def attention(cfg: ArchConfig, p: Params, x: jax.Array, positions: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    cd = _dtype(cfg.compute_dtype)
+    q, k, v = _project_qkv(cfg, p, x.astype(cd), positions)
+    if cfg.attention_impl == "flash" and causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        out = _sdpa(cfg, q, k, v, causal=causal, window=cfg.sliding_window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def attention_decode(cfg: ArchConfig, p: Params, x: jax.Array, cache: Params, pos: jax.Array) -> tuple[jax.Array, Params]:
+    """One-token decode against a KV cache.
+
+    cache = {"k": (B, Smax, K, D), "v": same, } ; pos: scalar int32 current length.
+    """
+    cd = _dtype(cfg.compute_dtype)
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x.astype(cd), positions)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    b, smax, kh, d = k_cache.shape
+    h = q.shape[2]
+    kvm = kv_head_map(h, kh, getattr(cfg, "orig_num_heads", 0))
+    # per-q-head logits against the full cache; softmax over the (possibly
+    # sequence-sharded) cache axis — SPMD reduces the max/sum collectively
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k_cache.astype(cd)[:, :, kvm, :]).astype(jnp.float32)
+    logits *= d ** -0.5
+    kpos = jnp.arange(smax)[None, :]
+    valid = kpos <= pos
+    if cfg.sliding_window:
+        valid &= kpos > pos - cfg.sliding_window
+    logits = jnp.where(valid[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cd)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v_cache.astype(cd)[:, :, kvm, :])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention(cfg: ArchConfig, p: Params, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    cd = _dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k, v = kv
+    out = _sdpa(cfg, q, k.astype(cd), v.astype(cd), causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp_init(d_model: int, d_ff: int, dtype, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s_in,
+        "up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * s_in,
+        "down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    cd = _dtype(compute_dtype)
+    x = x.astype(cd)
+    g = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, p["up"].astype(cd))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["down"].astype(cd))
+
+
+# ----------------------------------------------------------------- embedding
+def embedding_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    v = cfg.vocab_padded  # padded rows are inert (never indexed by tokens)
+    p = {"embed": jax.random.normal(ks[0], (v, cfg.d_model), dt) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(ks[1], (cfg.d_model, v), dt) * (cfg.d_model ** -0.5)
+    return p
+
+
+def embed(cfg: ArchConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    cd = _dtype(cfg.compute_dtype)
+    return jnp.take(p["embed"], tokens, axis=0).astype(cd)
+
+
+def unembed(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    cd = _dtype(cfg.compute_dtype)
+    w = p.get("unembed")
+    if w is None:
+        w = p["embed"].T
+    return jnp.einsum("bsd,dv->bsv", x.astype(cd), w.astype(cd))

@@ -1,0 +1,95 @@
+"""Fine-grained Mixture-of-Experts layer (DeepSeekMoE / Qwen3-MoE style).
+
+Routing is top-k with per-sequence capacity dropping (GShard-style), but the
+dispatch is **scatter/gather based** rather than the classic one-hot einsum:
+the (S, E, C) dispatch tensor would be ~100M elements per group at the
+assigned scales, while scatter/gather keeps the transient footprint at the
+intrinsic (B, E, C, D) expert-input size.
+
+Distribution baseline: expert FFN *hidden* dim is sharded over the ``model``
+mesh axis (tensor-parallel experts).  Because combine (a gather + weighted
+sum) is linear, the partial sums over the sharded hidden dim flow through
+combine, so SPMD places ONE all-reduce of (B, S, D) per MoE layer — the same
+collective a dense TP MLP needs.  A shard_map all-to-all expert-parallel
+variant lives in ``repro/sharding/ep.py`` and is evaluated in the §Perf
+hillclimb (beyond-paper optimization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, _dtype, mlp, mlp_init
+
+
+def moe_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p: Params = {
+        "router": jax.random.normal(ks[0], (d, e), dt) * s_in,
+        "gate": jax.random.normal(ks[1], (e, d, f), dt) * s_in,
+        "up": jax.random.normal(ks[2], (e, d, f), dt) * s_in,
+        "down": jax.random.normal(ks[3], (e, f, d), dt) * s_out,
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(d, f * cfg.num_shared_experts, dt, ks[4])
+    return p
+
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(cfg: ArchConfig, p: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).  Dispatch groups = batch rows."""
+    cd = _dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(cfg, s)
+    xt = x.astype(cd)
+
+    logits = jnp.einsum("bsd,de->bse", xt, p["router"].astype(cd)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    topw, topi = jax.lax.top_k(probs, k)                          # (B,S,K)
+    topw = (topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)).astype(cd)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    # slot assignment: position of each (token, k) within its expert's queue
+    flat_e = topi.reshape(b, s * k)                               # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # (B, S*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                     # (B, S*K, E)
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (B, S*K)
+    keep = slot < c
+    slot_c = jnp.where(keep, slot, 0)
+
+    # scatter tokens into per-expert buffers (B, E, C, D)
+    tok = jnp.repeat(xt, k, axis=1) if False else jnp.broadcast_to(
+        xt[:, :, None, :], (b, s, k, d)
+    ).reshape(b, s * k, d)
+    w_keep = jnp.where(keep, 1.0, 0.0).astype(cd)
+    buf = jnp.zeros((b, e, c, d), cd)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+    buf = buf.at[bidx, flat_e, slot_c].add(tok * w_keep[..., None])
+
+    # expert FFN, batched over experts (hidden dim sharded over 'model')
+    g = jnp.einsum("becd,edf->becf", buf, p["gate"].astype(cd))
+    u = jnp.einsum("becd,edf->becf", buf, p["up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("becf,efd->becd", h, p["down"].astype(cd))    # (B,E,C,D)
+
+    # combine: gather each token's k expert outputs and weight them
+    gathered = eo[bidx, flat_e, slot_c]                           # (B,S*K,D)
+    gathered = gathered * (topw.reshape(b, s * k)[..., None] * w_keep[..., None])
+    out = gathered.reshape(b, s, k, d).sum(axis=2)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(p["shared"], xt, cfg.compute_dtype)
+    return out.astype(x.dtype), aux

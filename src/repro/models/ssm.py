@@ -1,0 +1,154 @@
+"""Mamba2 block: state-space duality (SSD) with chunked scan.
+
+Follows the Mamba2 formulation (arXiv:2405.21060): input projections to
+(z, x, B, C, dt), short depthwise conv on (x, B, C), SSD chunked scan with
+scalar-per-head decay A, gated RMSNorm, output projection.
+
+Distribution note: the projections are kept **separate** (wz/wx/wb/wc/wdt)
+rather than fused, so the TP rules can shard the inner dim (d_inner -> heads)
+over the ``model`` axis without slicing across concatenated regions; B/C are
+small (ngroups * state) and replicated, mirroring GQA kv replication.
+
+The chunked scan lives in ``repro.kernels.ssd_scan`` — ``ops.ssd_scan``
+dispatches to the Pallas TPU kernel or the pure-jnp reference.  Decode keeps
+a constant-size recurrent state (B, H, P, N) plus a (conv_width-1)-deep conv
+cache — this is why SSM/hybrid archs are the ones that run ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, _dtype, rmsnorm, rmsnorm_init
+
+
+def ssm_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_num_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "wz": jax.random.normal(ks[0], (d, di), dt) * s,
+        "wx": jax.random.normal(ks[1], (d, di), dt) * s,
+        "wb": jax.random.normal(ks[2], (d, g * n), dt) * s,
+        "wc": jax.random.normal(ks[3], (d, g * n), dt) * s,
+        "wdt": jax.random.normal(ks[4], (d, h), dt) * s,
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv_width, di), dt) * 0.2,
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_b": jax.random.normal(ks[0], (cfg.ssm_conv_width, g * n), dt) * 0.2,
+        "conv_bb": jnp.zeros((g * n,), dt),
+        "conv_c": jax.random.normal(ks[1], (cfg.ssm_conv_width, g * n), dt) * 0.2,
+        "conv_bc": jnp.zeros((g * n,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dt),
+        "dt_bias": jnp.zeros((h,), dt),
+        "d_skip": jnp.ones((h,), dt),
+        "norm": rmsnorm_init(di, dt),
+        "out_proj": jax.random.normal(ks[2], (di, d), dt) * di**-0.5,
+    }
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W.  x: (B,S,C); w: (W,C)."""
+    wwidth = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (wwidth - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(wwidth):  # W=4: unrolled adds beat conv_general on TPU
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssm_forward(cfg: ArchConfig, p: Params, xin: jax.Array, return_state: bool = False):
+    """Full-sequence SSD.  xin: (B,S,D) -> out (B,S,D).
+
+    With ``return_state`` also returns (final_state, conv_tail) where
+    ``conv_tail`` holds the last (conv_width-1) *pre-conv* (x|B|C) inputs,
+    matching the decode conv-cache layout, so prefill hands off to decode.
+    """
+    cd = _dtype(cfg.compute_dtype)
+    b, s, _ = xin.shape
+    h, pdim, n, g = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xc = xin.astype(cd)
+
+    z = jnp.einsum("bsd,dk->bsk", xc, p["wz"].astype(cd))
+    x_raw = jnp.einsum("bsd,dk->bsk", xc, p["wx"].astype(cd))
+    b_raw = jnp.einsum("bsd,dk->bsk", xc, p["wb"].astype(cd))
+    c_raw = jnp.einsum("bsd,dk->bsk", xc, p["wc"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dk->bsk", xc, p["wdt"].astype(cd))
+
+    x = jax.nn.silu(_causal_conv(p["conv_x"].astype(cd), p["conv_bx"].astype(cd), x_raw))
+    bmat = jax.nn.silu(_causal_conv(p["conv_b"].astype(cd), p["conv_bb"].astype(cd), b_raw))
+    cmat = jax.nn.silu(_causal_conv(p["conv_c"].astype(cd), p["conv_bc"].astype(cd), c_raw))
+    x = x.reshape(b, s, h, pdim)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    y, state = ssd_ops.ssd_scan(x, dt, a, bmat, cmat, chunk=cfg.ssm_chunk)
+    y = y.astype(cd) + x * p["d_skip"].astype(cd)[None, None, :, None]
+    y = y.reshape(b, s, cfg.ssm_d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(cd))
+    if return_state:
+        w = cfg.ssm_conv_width - 1
+        tail = jnp.concatenate([x_raw, b_raw, c_raw], axis=-1)[:, -w:, :]
+        if s < w:
+            tail = jnp.pad(tail, ((0, 0), (w - s, 0), (0, 0)))
+        return out, state, tail
+    return out
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    h, pdim, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, pdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(cfg: ArchConfig, p: Params, xin: jax.Array, cache: Params):
+    """Single-token recurrent step.  xin: (B,1,D)."""
+    cd = _dtype(cfg.compute_dtype)
+    b = xin.shape[0]
+    h, pdim, n, g = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.ssm_d_inner
+    xc = xin.astype(cd)
+
+    z = jnp.einsum("bsd,dk->bsk", xc, p["wz"].astype(cd))
+    x_raw = jnp.einsum("bsd,dk->bsk", xc, p["wx"].astype(cd))[:, 0]
+    b_raw = jnp.einsum("bsd,dk->bsk", xc, p["wb"].astype(cd))[:, 0]
+    c_raw = jnp.einsum("bsd,dk->bsk", xc, p["wc"].astype(cd))[:, 0]
+    dt_raw = jnp.einsum("bsd,dk->bsk", xc, p["wdt"].astype(cd))[:, 0]
+
+    new_col = jnp.concatenate([x_raw, b_raw, c_raw], axis=-1)  # (B, conv_dim)
+    hist = jnp.concatenate([cache["conv"].astype(cd), new_col[:, None, :]], axis=1)  # (B,W,C)
+    wfull = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=1).astype(cd)
+    bfull = jnp.concatenate([p["conv_bx"], p["conv_bb"], p["conv_bc"]]).astype(cd)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, wfull) + bfull)
+    x = conv_out[:, :di].reshape(b, h, pdim)
+    bvec = conv_out[:, di : di + g * n].reshape(b, g, n)
+    cvec = conv_out[:, di + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    decay = jnp.exp(a[None] * dt)  # (B,H)
+    rep = h // g
+    bvec_h = jnp.repeat(bvec, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    cvec_h = jnp.repeat(cvec, rep, axis=1).astype(jnp.float32)
+    state = cache["state"]
+    dx = dt[..., None] * x.astype(jnp.float32)  # (B,H,P)
+    state = state * decay[..., None, None] + dx[..., None] * bvec_h[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, cvec_h).astype(cd)
+    y = y + x * p["d_skip"].astype(cd)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(cd))
+    new_cache = {"state": state, "conv": hist[:, 1:, :].astype(cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,334 @@
+"""Decoder-only LM composition for dense / MoE / SSM / hybrid / VLM families.
+
+Layers are **stacked** (leading axis = num_layers) and consumed with
+``jax.lax.scan`` so the traced HLO contains one layer body regardless of
+depth — essential for compile times at 48-60 layers on 512 placeholder
+devices.  Remat wraps the scan body when ``cfg.remat``.
+
+The hybrid (zamba2-style) family scans homogeneous Mamba2 layers and applies
+ONE weight-shared attention block every ``attn_every`` layers via
+``lax.cond`` inside the scan body; each application site has its own KV-cache
+slice (weights shared, caches not).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    Params,
+    _dtype,
+    attention,
+    attention_decode,
+    attention_init,
+    embed,
+    embedding_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from .moe import moe_apply, moe_init
+from .ssm import ssm_decode, ssm_forward, ssm_init, ssm_init_cache
+
+
+# ------------------------------------------------------------------- params
+def _layer_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"norm": rmsnorm_init(cfg.d_model, dt), "ssm": ssm_init(cfg, ks[0])}
+    p: Params = {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "attn": attention_init(cfg, ks[0]),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(cfg, ks[1])
+    else:
+        p["mlp"] = mlp_init(cfg.d_model, cfg.d_ff, dt, ks[1])
+    return p
+
+
+def _shared_block_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "attn": attention_init(cfg, ks[0]),
+        "mlp": mlp_init(cfg.d_model, cfg.d_ff, dt, ks[1]),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    params: Params = {
+        "embedding": embedding_init(cfg, ks[1]),
+        "final_norm": rmsnorm_init(cfg.d_model, _dtype(cfg.param_dtype)),
+        "layers": layers,
+    }
+    if cfg.family == "hybrid":
+        params["shared_block"] = _shared_block_init(cfg, ks[2])
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _dense_body(cfg: ArchConfig, lp: Params, x: jax.Array, positions: jax.Array):
+    h = attention(cfg, lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions)
+    x = x + h
+    if cfg.family == "moe":
+        out, aux = moe_apply(cfg, lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + out, aux
+    out = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def _shared_block_apply(cfg: ArchConfig, sp: Params, x: jax.Array, positions: jax.Array):
+    h = attention(cfg, sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions)
+    x = x + h
+    return x + mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+
+
+def _embed_inputs(cfg: ArchConfig, params: Params, batch: dict[str, Any]) -> jax.Array:
+    x = embed(cfg, params["embedding"], batch["tokens"])
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        cd = _dtype(cfg.compute_dtype)
+        x = jnp.concatenate([batch["patch_embeds"].astype(cd), x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict[str, Any]) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits over token positions, aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+
+        def body(carry, inp):
+            x, i = carry
+            lp = inp
+            h = ssm_forward(cfg, lp["ssm"], rmsnorm(lp["norm"], x, cfg.norm_eps))
+            x = x + h
+            if cfg.family == "hybrid":
+                x = jax.lax.cond(
+                    (i + 1) % cfg.attn_every == 0,
+                    lambda x: _shared_block_apply(cfg, shared, x, positions),
+                    lambda x: x,
+                    x,
+                )
+            return (x, i + 1), jnp.zeros((), jnp.float32)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, _), _ = jax.lax.scan(body_fn, (x, jnp.int32(0)), params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+
+        def body(x, lp):
+            return _dense_body(cfg, lp, x, positions)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(body_fn, x, params["layers"])
+        aux = auxs.sum()
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1] :]
+    logits = unembed(cfg, params["embedding"], x)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict[str, Any]) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux), numerically stable in fp32."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.clip(mask.sum(), 1.0)
+    return loss + 0.01 * aux
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        caches = ssm_init_cache(cfg, batch, dtype)
+        return {
+            "ssm": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), caches),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        sites = cfg.num_layers // cfg.attn_every
+        caches = ssm_init_cache(cfg, batch, dtype)
+        return {
+            "ssm": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), caches),
+            "k": jnp.zeros((sites, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((sites, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------- decode
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens: jax.Array):
+    """One-token decode.  tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    x = embed(cfg, params["embedding"], tokens)
+    pos = cache["pos"]
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+        sites = cfg.num_layers // cfg.attn_every if cfg.family == "hybrid" else 0
+
+        def body(carry, inp):
+            x, i, kc, vc = carry
+            lp, sc = inp
+            h, new_sc = ssm_decode(cfg, lp["ssm"], rmsnorm(lp["norm"], x, cfg.norm_eps), sc)
+            x = x + h
+            if cfg.family == "hybrid":
+                site = (i + 1) // cfg.attn_every - 1
+
+                def apply_attn(args):
+                    x, kc, vc = args
+                    site_c = jnp.clip(site, 0, sites - 1)
+                    kci = jax.lax.dynamic_index_in_dim(kc, site_c, 0, keepdims=False)
+                    vci = jax.lax.dynamic_index_in_dim(vc, site_c, 0, keepdims=False)
+                    xn = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+                    h, upd = attention_decode(cfg, shared["attn"], xn, {"k": kci, "v": vci}, pos)
+                    x = x + h
+                    x = x + mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+                    kc = jax.lax.dynamic_update_index_in_dim(kc, upd["k"], site_c, 0)
+                    vc = jax.lax.dynamic_update_index_in_dim(vc, upd["v"], site_c, 0)
+                    return x, kc, vc
+
+                x, kc, vc = jax.lax.cond(
+                    (i + 1) % cfg.attn_every == 0, apply_attn, lambda a: a, (x, kc, vc)
+                )
+            return (x, i + 1, kc, vc), new_sc
+
+        kc = cache.get("k", jnp.zeros((1, 1, 1, 1, 1), x.dtype))
+        vc = cache.get("v", jnp.zeros((1, 1, 1, 1, 1), x.dtype))
+        (x, _, kc, vc), new_ssm = jax.lax.scan(
+            body, (x, jnp.int32(0), kc, vc), (params["layers"], cache["ssm"])
+        )
+        new_cache = {"ssm": new_ssm, "pos": pos + 1}
+        if cfg.family == "hybrid":
+            new_cache["k"], new_cache["v"] = kc, vc
+    else:
+
+        def body(x, inp):
+            lp, kci, vci = inp
+            xn = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, upd = attention_decode(cfg, lp["attn"], xn, {"k": kci, "v": vci}, pos)
+            x = x + h
+            if cfg.family == "moe":
+                out, _ = moe_apply(cfg, lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            else:
+                out = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+            return x + out, (upd["k"], upd["v"])
+
+        x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(cfg, params["embedding"], x)
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: dict[str, Any], max_len: int):
+    """Process a full prompt, returning (last-position logits, primed cache).
+
+    For attention families this recomputes K/V per layer into the cache; for
+    SSM/hybrid it returns the final recurrent state.  Implemented as forward
+    + cache-filling scan to keep one traced layer body.
+    """
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    # VLM: the patch prefix extends the cached sequence; preserve the caller's
+    # decode headroom by growing max_len by the prefix length
+    max_len = max(max_len + (s - batch["tokens"].shape[1]), s)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cache = init_cache(cfg, b, max_len, _dtype(cfg.compute_dtype))
+    cd = _dtype(cfg.compute_dtype)
+    from .layers import _project_qkv, _sdpa
+
+    def attn_with_kv(p, xn):
+        q, k, v = _project_qkv(cfg, p, xn.astype(cd), positions)
+        out = _sdpa(cfg, q, k, v, causal=True, window=cfg.sliding_window)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), k, v
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+        sites = cfg.num_layers // cfg.attn_every if cfg.family == "hybrid" else 0
+
+        def body(carry, inp):
+            x, i, kc, vc = carry
+            lp, sc = inp
+            h, state, conv_tail = ssm_forward(
+                cfg, lp["ssm"], rmsnorm(lp["norm"], x, cfg.norm_eps), return_state=True
+            )
+            x = x + h
+            new_sc = {"state": state.astype(sc["state"].dtype), "conv": conv_tail.astype(sc["conv"].dtype)}
+            if cfg.family == "hybrid":
+                site = jnp.clip((i + 1) // cfg.attn_every - 1, 0, max(sites - 1, 0))
+
+                def apply_attn(args):
+                    x, kc, vc = args
+                    h, k, v = attn_with_kv(shared["attn"], rmsnorm(shared["ln1"], x, cfg.norm_eps))
+                    x = x + h
+                    x = x + mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+                    pad = max_len - s
+                    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kc.dtype)
+                    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(vc.dtype)
+                    kc2 = jax.lax.dynamic_update_index_in_dim(kc, kp, site, 0)
+                    vc2 = jax.lax.dynamic_update_index_in_dim(vc, vp, site, 0)
+                    return x, kc2, vc2
+
+                x, kc, vc = jax.lax.cond(
+                    (i + 1) % cfg.attn_every == 0, apply_attn, lambda a: a, (x, kc, vc)
+                )
+            return (x, i + 1, kc, vc), new_sc
+
+        kc = cache.get("k", jnp.zeros((1, 1, 1, 1, 1), cd))
+        vc = cache.get("v", jnp.zeros((1, 1, 1, 1, 1), cd))
+        (x, _, kc, vc), new_ssm = jax.lax.scan(
+            body, (x, jnp.int32(0), kc, vc), (params["layers"], cache["ssm"])
+        )
+        cache["ssm"] = new_ssm
+        if cfg.family == "hybrid":
+            cache["k"], cache["v"] = kc, vc
+    else:
+
+        def body(x, lp):
+            xn = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, k, v = attn_with_kv(lp["attn"], xn)
+            x = x + h
+            if cfg.family == "moe":
+                out, _ = moe_apply(cfg, lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            else:
+                out = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.compute_dtype)
+            return x + out, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        pad = max_len - s
+        cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype)
+
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(cfg, params["embedding"], x[:, -1:])
+    return logits, cache

@@ -1,0 +1,76 @@
+"""Minimal batched serving engine: admit -> prefill -> decode loop.
+
+Uses the model's prefill/decode steps and the HybridCacheManager for
+placement decisions.  Single-host reference implementation (the dry-run
+serve_step is the scale path); drives the examples and serving tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from .cache_manager import CacheConfig, HybridCacheManager
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: jax.Array          # (S,) int32
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 512, batch_size: int = 4):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        bytes_per_token = (
+            2 * max(cfg.num_kv_heads, 1) * cfg.resolved_head_dim * 2 * cfg.num_layers
+        )
+        self.cache_mgr = HybridCacheManager(CacheConfig(
+            bytes_per_token=bytes_per_token, slab_tokens=min(max_len // 2, 512),
+            arena_tokens=max_len * batch_size,
+        ))
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(cfg, p, c, t)
+        )
+
+    def run_batch(self, requests: list[Request]) -> list[Request]:
+        """Prefill a uniform batch then greedy-decode to completion."""
+        assert len(requests) <= self.batch_size
+        for r in requests:
+            alloc = self.cache_mgr.admit(r.seq_id, len(r.prompt) + r.max_new_tokens)
+            if alloc is None:
+                raise RuntimeError("admission control: cache pool exhausted")
+        prompts = jnp.stack([r.prompt for r in requests])
+        batch = {"tokens": prompts}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (len(requests), self.cfg.num_patches, self.cfg.d_model), jnp.float32
+            )
+        if self.cfg.family == "encdec":
+            batch["frame_embeds"] = jnp.zeros(
+                (len(requests), self.cfg.encoder_frames, self.cfg.d_model), jnp.float32
+            )
+        logits, cache = self.model.prefill(self.cfg, self.params, batch, self.max_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        steps = max(r.max_new_tokens for r in requests)
+        for step in range(steps):
+            for i, r in enumerate(requests):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(tok[i, 0]))
+                    self.cache_mgr.extend(r.seq_id, len(r.prompt) + len(r.output))
+            if all(len(r.output) >= r.max_new_tokens for r in requests):
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for r in requests:
+            self.cache_mgr.release(r.seq_id)
+        return requests

@@ -1,0 +1,228 @@
+"""Parameter/activation sharding rules for the (pod, data, model) mesh.
+
+Strategy (baseline; §Perf hillclimbs explore alternatives):
+
+* **TP** over ``model``: attention q-heads, FFN hidden, MoE expert-hidden,
+  SSM inner dim, vocab.  KV heads and SSM B/C groups are **replicated** when
+  they don't divide the axis (GQA kv replication — standard TP practice).
+* **FSDP** over ``(pod, data)``: the non-TP dim of every large 2-D+ weight is
+  sharded over the data axes (ZeRO-3 style); XLA SPMD inserts the per-layer
+  all-gathers.  Optimizer state inherits parameter shardings.
+* **Head padding**: archs whose q-head count doesn't divide the model axis
+  (yi-34b 56H, phi3 40H) are padded to the next multiple with exact-zero
+  padded heads (``pad_config_for_mesh``); vocab is padded to a lane-aligned
+  multiple of the model axis.  Both documented in DESIGN.md §2.4.
+* **Decode caches**: KV caches shard batch over data and sequence over
+  ``model`` (sequence-parallel cache; softmax stats reduce collectively).
+  When batch is 1 (long_500k) the sequence axis takes all mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+
+# Layouts (the §Perf hillclimb knobs; default is the paper-faithful baseline):
+#   baseline            — TP over 'model', FSDP over (pod, data)
+#   dp-only             — no TP: 'model' joins the data axes (batch + FSDP
+#                         shard over every axis).  Right for small models
+#                         whose TP all-reduces dwarf their compute.
+#   replicated-weights  — weights sharded over 'model' only (replicated over
+#                         data axes).  Right for decode: kills the per-step
+#                         FSDP re-gather at the cost of dp x weight memory.
+LAYOUTS = ("baseline", "dp-only", "replicated-weights", "pure-dp")
+# pure-dp: weights fully replicated, batch over every axis — the classic
+# small-model answer (grad all-reduce is the only collective).
+
+
+def data_axes(mesh: Mesh, layout: str = "baseline") -> tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if layout == "dp-only" and "model" in mesh.axis_names:
+        axes = (*axes, "model")
+    if layout in ("replicated-weights", "pure-dp"):
+        return ()  # weights see no data axes
+    return axes
+
+
+def model_axis_size(mesh: Mesh, layout: str = "baseline") -> int:
+    if layout in ("dp-only", "pure-dp"):
+        return 1
+    return mesh.shape.get("model", 1)
+
+
+def pad_config_for_mesh(cfg: ArchConfig, mesh: Mesh, layout: str = "baseline") -> ArchConfig:
+    """Pad q heads / vocab so TP dims divide the model axis (exact math)."""
+    tp = model_axis_size(mesh, layout)
+    changes: dict[str, Any] = {"vocab_pad_multiple": 128 * tp}
+    if cfg.num_heads and cfg.num_heads % tp:
+        padded = -(-cfg.num_heads // tp) * tp
+        changes["orig_num_heads"] = cfg.num_heads
+        changes["num_heads"] = padded
+    return dataclasses.replace(cfg, **changes)
+
+
+def _spec_for(name: str, shape: tuple[int, ...], cfg: ArchConfig, mesh: Mesh, stacked: bool, layout: str = "baseline") -> P:
+    da = data_axes(mesh, layout)
+    DA = da if len(da) > 1 else (da[0] if da else None)
+    tp = model_axis_size(mesh, layout)
+    mdl = "model" if tp > 1 else None
+
+    def div(dim: int, axis) -> Any:
+        if axis is None:
+            return None
+        size = mesh.shape["model"] if axis == "model" else _axes_size(mesh, axis)
+        return axis if dim % size == 0 else None
+
+    def _axes_size(mesh, axis):
+        if isinstance(axis, tuple):
+            out = 1
+            for a in axis:
+                out *= mesh.shape[a]
+            return out
+        return mesh.shape[axis]
+
+    d = shape[1:] if stacked else shape
+    nd = len(d)
+    spec: tuple = ()
+    if name in ("embed",):
+        spec = (div(d[0], mdl), div(d[1], DA))
+    elif name == "unembed":
+        spec = (div(d[0], DA), div(d[1], mdl))
+    elif name == "dec_pos":
+        spec = (div(d[0], mdl), div(d[1], DA))
+    elif name == "wq":
+        spec = (div(d[0], DA), div(d[1], mdl), None)
+    elif name in ("wk", "wv"):
+        spec = (div(d[0], DA), div(d[1], mdl), None)
+    elif name == "wo":
+        spec = (div(d[0], mdl), None, div(d[2], DA))
+    elif name in ("bq", "bk", "bv"):
+        spec = (div(d[0], mdl), None)
+    elif name in ("gate", "up"):  # mlp (D,F) or moe (E,D,F)
+        if nd == 2:
+            spec = (div(d[0], DA), div(d[1], mdl))
+        else:
+            spec = (None, div(d[1], DA), div(d[2], mdl))
+    elif name == "down":          # mlp (F,D) or moe (E,F,D)
+        if nd == 2:
+            spec = (div(d[0], mdl), div(d[1], DA))
+        else:
+            spec = (None, div(d[1], mdl), div(d[2], DA))
+    elif name == "router":
+        spec = (div(d[0], DA), None)
+    elif name in ("wi", "wo_mlp"):
+        spec = (div(d[0], DA), div(d[1], mdl))
+    elif name in ("wz", "wx"):
+        spec = (div(d[0], DA), div(d[1], mdl))
+    elif name in ("wb", "wc"):
+        spec = (div(d[0], DA), None)
+    elif name == "wdt":
+        spec = (div(d[0], DA), div(d[1], mdl))
+    elif name == "out_proj":
+        spec = (div(d[0], mdl), div(d[1], DA))
+    elif name == "conv_x":
+        spec = (None, div(d[1], mdl))
+    elif name in ("conv_b", "conv_c"):
+        spec = (None, None)
+    elif name in ("a_log", "dt_bias", "d_skip"):
+        spec = (div(d[0], mdl),)
+    elif name == "bi":            # gelu mlp hidden bias (F,)
+        spec = (div(d[0], mdl),)
+    else:                          # norms, small biases: replicate
+        spec = (None,) * nd
+    if stacked:
+        spec = (None, *spec)
+    return P(*spec)
+
+
+_GELU_FIX = {"wi": "wi", "wo": None}  # gelu-mlp wo collides with attention wo
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shape, layout: str = "baseline") -> Any:
+    """PartitionSpec tree matching a (possibly abstract) param tree."""
+
+    def walk(path: tuple, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        stacked = any(n in ("layers", "enc_layers", "dec_layers") for n in names)
+        # disambiguate gelu-mlp 'wo' (D-major 2d) from attention 'wo' (3d)
+        if name == "wo" and len(leaf.shape) - (1 if stacked else 0) == 2:
+            name = "wo_mlp"
+        if name in ("scale", "bias", "bo", "conv_bx", "conv_bb", "conv_bc"):
+            nd = len(leaf.shape) - (1 if stacked else 0)
+            return P(*((None,) * len(leaf.shape)))
+        return _spec_for(name, leaf.shape, cfg, mesh, stacked, layout)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape, layout: str = "baseline") -> Any:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(cfg, mesh, params_shape, layout),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------- activations
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_shape, layout: str = "baseline") -> Any:
+    da = data_axes(mesh, "dp-only" if layout in ("dp-only", "pure-dp") else "baseline")
+    DA = da if len(da) > 1 else (da[0] if da else None)
+
+    def spec(path, leaf):
+        b = leaf.shape[0]
+        dsz = 1
+        for a in da:
+            dsz *= mesh.shape[a]
+        first = DA if b % max(dsz, 1) == 0 and dsz > 1 else None
+        return P(first, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shape, layout: str = "baseline") -> Any:
+    """KV/SSM cache shardings for decode (see module docstring)."""
+    da = data_axes(mesh, "dp-only" if layout in ("dp-only", "pure-dp") else "baseline")
+    DA = da if len(da) > 1 else (da[0] if da else None)
+    dsz = 1
+    for a in da:
+        dsz *= mesh.shape[a]
+    tp = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        shp = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L_or_sites, B, S, K, hd)
+            _, b, s, kh, hd = shp
+            bspec = DA if dsz > 1 and b % dsz == 0 else None
+            if bspec is None and dsz > 1 and s % (dsz * tp) == 0:
+                sspec = (*da, "model") if tp > 1 else DA
+            else:
+                sspec = "model" if tp > 1 and s % tp == 0 else None
+            return P(None, bspec, sspec, None, None)
+        if name == "state":  # (L, B, H, P, N)
+            _, b, h, p, n = shp
+            bspec = DA if dsz > 1 and b % dsz == 0 else None
+            hspec = "model" if tp > 1 and h % tp == 0 else None
+            return P(None, bspec, hspec, None, None)
+        if name == "conv":  # (L, B, W, C) — small, replicate beyond batch
+            b = shp[1]
+            bspec = DA if dsz > 1 and b % dsz == 0 else None
+            return P(None, bspec, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )

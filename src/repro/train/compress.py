@@ -1,0 +1,74 @@
+"""Gradient compression for the DP all-reduce (distributed-opt trick).
+
+Two schemes, both with **error feedback** so compression error accumulates
+into the next step instead of biasing the update (Karimireddy et al. 2019):
+
+* ``int8``: per-tensor symmetric quantization.  The all-reduce payload drops
+  4x (fp32->int8); on the wire this cuts the collective roofline term of the
+  data axis proportionally.
+* ``topk``: keep the top 1% |values| per tensor (sparse push).
+
+Because pjit's all-reduce happens inside autodiff, the practical integration
+quantizes gradients *before* the optimizer (value semantics); the wire saving
+is realized when paired with ``shard_map``-level reductions — benchmarked in
+§Perf.  Error-feedback state is carried in a host-side buffer keyed by tree
+path (single-controller semantics; per-host in multi-host runs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_error_state: dict[int, Any] = {}
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, *, method: str = "int8", topk_frac: float = 0.01, error_state: Any | None = None):
+    """Returns compressed-then-decompressed grads (+ optionally new error state).
+
+    When ``error_state`` is given, applies error feedback: g' = g + e;
+    e_next = g' - decompress(compress(g')).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if e is not None:
+            gf = gf + e
+        if method == "int8":
+            q, s = quantize_int8(gf)
+            out = dequantize_int8(q, s)
+        elif method == "topk":
+            k = max(1, int(gf.size * topk_frac))
+            flat = gf.reshape(-1)
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            out = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(gf.shape)
+        else:
+            raise ValueError(method)
+        err = gf - out
+        return out.astype(g.dtype), err
+
+    if error_state is None:
+        return jax.tree.map(lambda g: one(g, None)[0], grads)
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in outs]), td.unflatten([o[1] for o in outs])
+
+
+def init_error_state(grads_shape: Any) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape)
+
+
+def wire_savings(method: str) -> float:
+    """Payload-size ratio vs fp32 all-reduce (for roofline accounting)."""
+    return {"int8": 0.25, "topk": 0.02, "none": 1.0}[method]

@@ -1,0 +1,123 @@
+"""Sharded train / prefill / decode step builders.
+
+``make_train_step`` returns a jit'd (params, opt_state, batch) -> updated
+function with donated params/opt buffers; sharding comes from
+``repro.sharding.rules``.  Optional hooks: gradient compression (error
+feedback, ``repro.train.compress``) and microbatched gradient accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+def abstract_params(cfg: ArchConfig):
+    m = get_model(cfg)
+    return jax.eval_shape(lambda k: m.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(adamw.init, params_shape)
+
+
+def make_train_fn(cfg: ArchConfig, ocfg: adamw.AdamWConfig | None = None, *, compress: str = "none", accum_steps: int = 1, grad_dtype: str = "float32"):
+    """The pure train-step function (un-jitted) — callers add shardings.
+
+    ``grad_dtype='bfloat16'`` differentiates w.r.t. a bf16 copy of the params
+    (mixed precision): gradients — and therefore the data-parallel reduction
+    on the wire — are bf16, halving the gradient collective.  The fp32 master
+    weights still receive the update (adamw casts grads to fp32 internally).
+    """
+    ocfg = ocfg or adamw.AdamWConfig()
+    m = get_model(cfg)
+
+    def loss_of(params, batch):
+        return m.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_dtype != "float32":
+            dt = jnp.dtype(grad_dtype)
+            cast = jax.tree.map(lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+            loss, grads = jax.value_and_grad(loss_of)(cast, batch)
+            new_params, new_opt, metrics = adamw.update(ocfg, grads, opt_state, params)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+        if accum_steps > 1:
+            def micro(i, acc):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * (x.shape[0] // accum_steps), x.shape[0] // accum_steps, 0),
+                    batch,
+                )
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g))
+
+            zero = (jnp.zeros(()), jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            loss, grads = jax.lax.fori_loop(0, accum_steps, micro, zero)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        if compress != "none":
+            from repro.train.compress import compress_grads
+
+            grads = compress_grads(grads, method=compress)
+        new_params, new_opt, metrics = adamw.update(ocfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_train_step(cfg: ArchConfig, mesh, ocfg: adamw.AdamWConfig | None = None, **kw):
+    """jit'd train step with full sharding annotations for `mesh`."""
+    params_shape = abstract_params(cfg)
+    pspecs = rules.param_shardings(cfg, mesh, params_shape)
+    opt_shape = abstract_opt_state(params_shape)
+    ospecs = {
+        "mu": pspecs,
+        "nu": pspecs,
+        "step": NamedSharding(mesh, PartitionSpec()),
+    }
+    fn = make_train_fn(cfg, ocfg, **kw)
+    repl = NamedSharding(mesh, PartitionSpec())
+    step = jax.jit(
+        fn,
+        in_shardings=(pspecs, ospecs, None),
+        out_shardings=(pspecs, ospecs, repl),
+        donate_argnums=(0, 1),
+    )
+    return step, params_shape, pspecs, opt_shape, ospecs
+
+
+def make_prefill_fn(cfg: ArchConfig, max_len: int):
+    m = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return m.prefill(cfg, params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ArchConfig):
+    m = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = m.decode_step(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = get_model(cfg)
+    return jax.eval_shape(functools.partial(m.init_cache, cfg, batch, max_len, dtype))

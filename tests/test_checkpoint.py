@@ -1,0 +1,111 @@
+"""LSM checkpointer: roundtrip, crash tolerance, GC, placement economics."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import LogStructuredCheckpointer
+
+
+def make_state(rng, step=0):
+    return {
+        "embed": rng.standard_normal((2000, 64)).astype(np.float32),     # ~512KB: large
+        "ffn_w": rng.standard_normal((64, 256)).astype(np.float32),      # 64KB: large
+        "medium": rng.standard_normal((80,)).astype(np.float32),         # 320B: medium
+        "gain": rng.standard_normal((8,)).astype(np.float32),            # 32B: medium/small
+        "scalar": np.float32(step),                                      # 4B: small -> inline
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = LogStructuredCheckpointer(str(tmp_path), consolidate_every=100)
+    rng = np.random.default_rng(0)
+    state = make_state(rng)
+    ck.save(0, state)
+    out, step = ck.restore()
+    assert step == 0
+    for k, v in state.items():
+        np.testing.assert_array_equal(out[k], np.asarray(v))
+
+
+def test_incremental_and_consolidation(tmp_path):
+    ck = LogStructuredCheckpointer(str(tmp_path), consolidate_every=4)
+    rng = np.random.default_rng(1)
+    state = make_state(rng)
+    for step in range(10):
+        state["ffn_w"] = state["ffn_w"] * 0.9
+        state["scalar"] = np.float32(step)
+        ck.save(step, state, changed={"ffn_w", "scalar"})
+    out, step = ck.restore()
+    assert step == 9
+    np.testing.assert_allclose(out["ffn_w"], state["ffn_w"], rtol=1e-6)
+    np.testing.assert_array_equal(out["embed"], state["embed"])
+    # transient segments were reclaimed wholesale at consolidation
+    tsegs = [f for f in os.listdir(tmp_path) if f.startswith("tseg-")]
+    assert len(tsegs) <= 2
+
+
+def test_torn_manifest_tail(tmp_path):
+    ck = LogStructuredCheckpointer(str(tmp_path), consolidate_every=100)
+    rng = np.random.default_rng(2)
+    state = make_state(rng)
+    ck.save(0, state)
+    ck.save(1, state)
+    with open(os.path.join(str(tmp_path), "MANIFEST"), "a") as f:
+        f.write('{"key": "embed", "lsn": 999, "step"')  # torn write
+    out, step = ck.restore()
+    assert step == 1
+    np.testing.assert_array_equal(out["embed"], state["embed"])
+
+
+def test_gc_reclaims_large_segments(tmp_path):
+    ck = LogStructuredCheckpointer(str(tmp_path), consolidate_every=1000, gc_threshold=0.1)
+    rng = np.random.default_rng(3)
+    state = make_state(rng)
+    for step in range(6):
+        state["embed"] = state["embed"] + 1.0  # rewrite the large tensor
+        ck.save(step, state)
+    segs = [f for f in os.listdir(tmp_path) if f.startswith("seg-")]
+    # GC keeps the live generation only, not 6 copies
+    live_bytes = state["embed"].nbytes + state["ffn_w"].nbytes
+    on_disk = sum(os.path.getsize(os.path.join(tmp_path, s)) for s in segs)
+    assert on_disk < 3 * live_bytes
+    out, _ = ck.restore()
+    np.testing.assert_array_equal(out["embed"], state["embed"])
+
+
+def test_hybrid_beats_inline_write_amp(tmp_path):
+    """The paper's economics transplanted: hybrid placement writes less than
+    consolidate-every-step inline checkpoints for update-heavy traces."""
+    amps = {}
+    for mode in ("hybrid", "inline"):
+        d = tmp_path / mode
+        ck = LogStructuredCheckpointer(str(d), mode=mode, consolidate_every=8)
+        rng = np.random.default_rng(4)
+        state = make_state(rng)
+        for step in range(16):
+            state["medium"] = state["medium"] + 0.1
+            state["scalar"] = np.float32(step)
+            ck.save(step, state, changed={"medium", "scalar"})
+        amps[mode] = ck.device.stats.bytes_written
+    assert amps["hybrid"] <= amps["inline"]
+
+
+def test_manager_with_jax_pytree(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), consolidate_every=4)
+    params = {
+        "layer": {"w": jnp.arange(128, dtype=jnp.float32).reshape(8, 16), "b": jnp.ones((16,))},
+        "step_count": jnp.zeros((), jnp.int32),
+    }
+    mgr.save(3, params)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    restored, step = mgr.restore(like)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    stats = mgr.stats()
+    assert stats["write_amplification"] >= 1.0

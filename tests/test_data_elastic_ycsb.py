@@ -1,0 +1,104 @@
+"""Data pipeline determinism, elastic/straggler policies, YCSB generator."""
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.ycsb import MIXES, Workload, ZipfGenerator
+from repro.data.pipeline import DataConfig, host_batch
+from repro.elastic.remap import StragglerPolicy, shrink_mesh
+
+
+# ------------------------------------------------------------------ pipeline
+def test_pipeline_deterministic_and_host_disjoint():
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    d = DataConfig(seq_len=32, global_batch=8, seed=1)
+    a1 = host_batch(cfg, d, step=5, host_id=0, num_hosts=4)
+    a2 = host_batch(cfg, d, step=5, host_id=0, num_hosts=4)
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])  # restart-stable
+    b = host_batch(cfg, d, step=5, host_id=1, num_hosts=4)
+    assert not np.array_equal(a1["tokens"], b["tokens"])       # hosts differ
+    c = host_batch(cfg, d, step=6, host_id=0, num_hosts=4)
+    assert not np.array_equal(a1["tokens"], c["tokens"])       # steps differ
+    assert a1["tokens"].shape == (2, 32)
+    assert np.array_equal(a1["tokens"][:, 1:], a1["labels"][:, :-1])
+
+
+def test_pipeline_modality_stubs():
+    vlm = ARCHS["internvl2-26b"].reduced()
+    b = host_batch(vlm, DataConfig(16, 4), step=0)
+    assert b["patch_embeds"].shape == (4, vlm.num_patches, vlm.d_model)
+    aud = ARCHS["whisper-medium"].reduced()
+    b = host_batch(aud, DataConfig(16, 4), step=0)
+    assert b["frame_embeds"].shape == (4, aud.encoder_frames, aud.d_model)
+
+
+# ------------------------------------------------------------------- elastic
+def test_shrink_mesh_prefers_model_axis():
+    m = shrink_mesh(1, prefer_model=16)
+    assert m.shape["model"] == 1 and m.shape["data"] == 1
+
+
+def test_straggler_policy_flags_and_rebalances():
+    pol = StragglerPolicy(threshold=1.5, min_samples=3)
+    for step in range(5):
+        for h in range(4):
+            pol.observe(h, 1.0 if h != 2 else 3.0)
+    assert pol.stragglers() == [2]
+    alloc = pol.rebalance(256, [0, 1, 2, 3])
+    assert sum(alloc.values()) == 256
+    assert alloc[2] < alloc[0]  # straggler gets less work
+    assert min(alloc.values()) >= 1
+
+
+def test_straggler_policy_quiet_when_uniform():
+    pol = StragglerPolicy()
+    for step in range(5):
+        for h in range(4):
+            pol.observe(h, 1.0 + 0.01 * h)
+    assert pol.stragglers() == []
+    alloc = pol.rebalance(64, [0, 1, 2, 3])
+    assert all(v == 16 for v in alloc.values())
+
+
+# ---------------------------------------------------------------------- ycsb
+def test_ycsb_load_covers_keyspace():
+    w = Workload("load_a", "SD", num_keys=500, num_ops=0, seed=3)
+    ops = list(w.load_ops())
+    assert len(ops) == 500
+    assert len({o.key for o in ops}) == 500
+    sizes = {o.value_size for o in ops}
+    assert sizes <= {9, 104, 1004}
+
+
+def test_ycsb_mix_fractions():
+    w = Workload("load_a", "MD", num_keys=4000, num_ops=0, seed=4)
+    ops = list(w.load_ops())
+    med = sum(1 for o in ops if o.value_size == 104) / len(ops)
+    assert 0.5 < med < 0.7  # MD: 60% medium
+
+
+def test_ycsb_run_a_op_mix():
+    w = Workload("run_a", "S", num_keys=1000, num_ops=4000, seed=5)
+    ops = list(w.run_ops())
+    upd = sum(1 for o in ops if o.kind == "update") / len(ops)
+    rd = sum(1 for o in ops if o.kind == "read") / len(ops)
+    assert 0.45 < upd < 0.55 and 0.45 < rd < 0.55
+
+
+def test_ycsb_deterministic():
+    w1 = list(Workload("run_b", "LD", 100, 200, seed=9).run_ops())
+    w2 = list(Workload("run_b", "LD", 100, 200, seed=9).run_ops())
+    assert [(o.kind, o.key) for o in w1] == [(o.kind, o.key) for o in w2]
+
+
+def test_zipf_is_skewed():
+    z = ZipfGenerator(1000, seed=0)
+    samples = z.sample(20000)
+    _, counts = np.unique(samples, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[:10].sum() > 0.2 * len(samples)  # hot keys dominate
+
+
+def test_all_mixes_defined():
+    assert set(MIXES) == {"S", "M", "L", "SD", "MD", "LD"}
+    for s, m, l in MIXES.values():
+        assert s + m + l == 100

@@ -1,0 +1,79 @@
+"""Paper Section 2: the I/O-amplification model (Eq. 1-4, R(i), thresholds)."""
+import numpy as np
+import pytest
+
+from repro.core import model as M
+
+
+@pytest.mark.parametrize("levels,f", [(2, 4), (3, 4), (3, 8), (4, 8), (5, 10)])
+def test_eq1_literal_matches_eq2_closed_form(levels, f):
+    s0 = 1024.0
+    sl = s0 * f**levels
+    literal = M.amplification_inplace_sum(levels, f, s0)
+    closed = M.amplification_inplace(levels, f, sl)
+    assert literal == pytest.approx(closed, rel=1e-9)
+
+
+def test_eq4_ratio_consistent_with_eq2_eq3():
+    l, f = 4, 8
+    for p in [0.01, 0.02, 0.1, 0.2, 0.5, 1.0]:
+        d = M.amplification_inplace(l, f, 1.0)
+        dp = M.amplification_separated(l, f, p, 1.0)
+        ratio = float(M.separation_benefit(l, f, p))
+        assert ratio == pytest.approx(d / dp, rel=1e-5)
+
+
+def test_paper_fig2a_magnitudes():
+    """Fig. 2a: order-of-magnitude benefit for large, <=~3x for small KVs."""
+    l, f = 4, 8  # production-like tree
+    large = float(M.separation_benefit(l, f, 0.012))  # 1004B values, 12B prefix
+    med = float(M.separation_benefit(l, f, 0.094))    # 104B values
+    small = float(M.separation_benefit(l, f, 0.33))   # 9B values w/ 12B prefix
+    assert large > 6.0
+    assert 3.0 < med < large
+    assert small < 3.0
+
+
+def test_capacity_ratio_matches_paper_fig2b():
+    # paper: merging at N-1 delays ~10% (f=8) to ~25% (f=4) of capacity
+    assert 0.09 < M.capacity_ratio(5, 8, 1) < 0.15
+    assert 0.2 < M.capacity_ratio(5, 4, 1) < 0.27
+    # merging at N-2 delays at most ~6%
+    assert M.capacity_ratio(5, 4, 2) < 0.07
+    assert M.capacity_ratio(5, 8, 2) < 0.03
+
+
+def test_capacity_ratio_monotonic():
+    for f in (4, 8, 10):
+        rs = [M.capacity_ratio(6, f, i) for i in range(1, 5)]
+        assert all(a > b for a, b in zip(rs, rs[1:]))
+
+
+def test_classifier_paper_sizes():
+    """Table 1 sizes: 24B keys; 9/104/1004B values -> small/medium/large."""
+    pol = M.SizePolicy()
+    assert pol.classify_scalar(24, 9) == 0      # small: in place
+    assert pol.classify_scalar(24, 104) == 1    # medium: transient log
+    assert pol.classify_scalar(24, 1004) == 2   # large: log + GC
+
+
+def test_classifier_thresholds_are_boundaries():
+    pol = M.SizePolicy(prefix_size=12)
+    # p exactly above T_SM -> small; below T_ML -> large
+    assert pol.classify_scalar(12, 12) == 0       # p = 0.5
+    assert pol.classify_scalar(12, 1200) == 2     # p ~ 0.0099
+    assert pol.classify_scalar(12, 100) == 1      # p ~ 0.107
+
+
+def test_classifier_vectorized_matches_scalar():
+    pol = M.SizePolicy()
+    ks = np.array([24, 24, 24, 12, 100])
+    vs = np.array([9, 104, 1004, 5000, 4])
+    vec = np.asarray(pol.classify(ks, vs))
+    scl = np.array([pol.classify_scalar(int(k), int(v)) for k, v in zip(ks, vs)])
+    assert np.array_equal(vec, scl)
+
+
+def test_levels_for_dataset():
+    assert M.levels_for_dataset(100 * 2**30, 2**27, 8) == 4  # 100GB, 128MB L0
+    assert M.levels_for_dataset(2**27, 2**27, 8) == 1

@@ -1,0 +1,88 @@
+"""Roofline analytic-model unit tests: invariants a correct cost model obeys."""
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import roofline
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_terms_positive_and_finite(arch):
+    cfg = ARCHS[arch]
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        a = roofline.analytic_costs(cfg, SHAPES[shape], MESH)
+        assert a["flops_dev"] > 0 and a["hbm_dev"] > 0 and a["wire_dev"] >= 0
+        for v in a.values():
+            assert v == v and v != float("inf")
+
+
+def test_multipod_divides_work():
+    cfg = ARCHS["qwen3-8b"]
+    single = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH)
+    multi = roofline.analytic_costs(cfg, SHAPES["train_4k"], POD)
+    # 2x devices -> per-device matmul flops halve (attention too)
+    assert multi["flops_dev"] < 0.6 * single["flops_dev"]
+
+
+def test_pure_dp_removes_tp_collectives():
+    cfg = ARCHS["mamba2-780m"]
+    base = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH, "baseline")
+    pure = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH, "pure-dp")
+    assert pure["wire_dev"] < 0.1 * base["wire_dev"]
+
+
+def test_replicated_weights_kills_decode_gather():
+    cfg = ARCHS["qwen3-moe-30b-a3b"]
+    base = roofline.analytic_costs(cfg, SHAPES["decode_32k"], MESH, "baseline")
+    repl = roofline.analytic_costs(cfg, SHAPES["decode_32k"], MESH, "replicated-weights")
+    assert repl["wire_dev"] < 0.05 * base["wire_dev"]
+
+
+def test_bf16_grads_halve_grad_reduction():
+    cfg = ARCHS["mamba2-780m"]
+    f32 = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH, "pure-dp", grad_bytes=4)
+    bf16 = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH, "pure-dp", grad_bytes=2)
+    assert bf16["wire_dev"] == pytest.approx(f32["wire_dev"] / 2, rel=0.01)
+
+
+def test_train_flops_track_remat():
+    import dataclasses
+
+    cfg = ARCHS["qwen2.5-3b"]
+    with_r = roofline.analytic_costs(cfg, SHAPES["train_4k"], MESH)
+    no_r = roofline.analytic_costs(dataclasses.replace(cfg, remat=False), SHAPES["train_4k"], MESH)
+    assert with_r["flops_dev"] == pytest.approx(no_r["flops_dev"] * 8 / 6, rel=0.02)
+
+
+def test_model_flops_definition():
+    cfg = ARCHS["deepseek-moe-16b"]
+    mf_train = roofline.model_flops_for(cfg, SHAPES["train_4k"])
+    assert mf_train == pytest.approx(6 * cfg.active_param_count() * 256 * 4096)
+    mf_dec = roofline.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert mf_dec == pytest.approx(2 * cfg.active_param_count() * 128)
+
+
+def test_collective_parse_handles_hlo_shapes():
+    hlo = """
+      %ar = f32[16,4096] all-reduce(f32[16,4096] %x), replica_groups={{0,1,2,3}}
+      %ag = bf16[8,128] all-gather(bf16[2,128] %y), replica_groups=[4,8]<=[32]
+      %cp = f32[4] collective-permute(f32[4] %z)
+    """
+    stats = roofline.collective_bytes(hlo)
+    assert stats.count == 3
+    ar = 2 * 16 * 4096 * 4 * (3 / 4)
+    ag = 8 * 128 * 2 * (7 / 8)
+    cp = 16
+    assert stats.wire_bytes == pytest.approx(ar + ag + cp)

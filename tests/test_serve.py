@@ -1,0 +1,78 @@
+"""Serving engine + hybrid KV-cache manager tests."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import get_model
+from repro.serve.cache_manager import CacheConfig, HybridCacheManager
+from repro.serve.engine import Request, ServeEngine
+
+
+def test_cache_manager_placement_classes():
+    cfg = CacheConfig(bytes_per_token=1024, slab_tokens=256, arena_tokens=8192)
+    mgr = HybridCacheManager(cfg)
+    a = mgr.admit(1, 100)       # short -> slab
+    b = mgr.admit(2, 2000)      # medium -> transient arena
+    c = mgr.admit(3, 20000)     # long -> paged pool
+    assert (a.kind, b.kind, c.kind) == ("slab", "transient", "paged")
+    assert len(c.pages) == -(-20000 // 16)
+
+
+def test_cache_manager_wholesale_arena_reclaim():
+    cfg = CacheConfig(bytes_per_token=64, slab_tokens=16, arena_tokens=4096)
+    mgr = HybridCacheManager(cfg)
+    for i in range(4):
+        assert mgr.admit(i, 1000).kind == "transient"
+    assert mgr.stats()["arena_used_tokens"] == 4000
+    for i in range(4):
+        mgr.release(i)
+    s = mgr.stats()
+    # zero per-page GC for mediums; one wholesale reset (the paper's economy)
+    assert s["arena_used_tokens"] == 0
+    assert s["wholesale_reclaims"] == 1
+    assert s["gc_page_ops"] == 0
+
+
+def test_cache_manager_paged_gc_and_reuse():
+    cfg = CacheConfig(bytes_per_token=64, slab_tokens=16, arena_tokens=32, pool_pages=64)
+    mgr = HybridCacheManager(cfg)
+    a = mgr.admit(1, 512)
+    assert a.kind == "paged"
+    before = mgr.stats()["free_pages"]
+    mgr.release(1)
+    assert mgr.stats()["free_pages"] == before + len(a.pages)
+    assert mgr.stats()["gc_page_ops"] == len(a.pages)
+    # pages are reusable
+    b = mgr.admit(2, 512)
+    assert b.kind == "paged"
+
+
+def test_cache_manager_slab_overflow_promotes():
+    cfg = CacheConfig(bytes_per_token=64, slab_tokens=32, arena_tokens=64, pool_pages=128)
+    mgr = HybridCacheManager(cfg)
+    a = mgr.admit(1, 20)
+    assert a.kind == "slab"
+    assert mgr.extend(1, 40)  # grew past the slab: promoted to paged
+    assert mgr.allocs[1].kind == "paged"
+
+
+def test_admission_control():
+    cfg = CacheConfig(bytes_per_token=64, slab_tokens=4, slab_slots=1, arena_tokens=8, pool_pages=2)
+    mgr = HybridCacheManager(cfg)
+    assert mgr.admit(1, 4096) is None  # no capacity -> rejected, not corrupted
+    assert mgr.stats()["active"] == 0
+
+
+def test_serve_engine_end_to_end():
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=64, batch_size=2)
+    reqs = [
+        Request(0, jnp.arange(8, dtype=jnp.int32) % cfg.vocab_size, max_new_tokens=6),
+        Request(1, (jnp.arange(8, dtype=jnp.int32) + 3) % cfg.vocab_size, max_new_tokens=6),
+    ]
+    done = eng.run_batch(reqs)
+    assert all(len(r.output) == 6 for r in done)
+    assert all(0 <= t < cfg.vocab_padded for r in done for t in r.output)
+    assert eng.cache_mgr.stats()["active"] == 0  # everything released

@@ -1,0 +1,157 @@
+"""ParallaxStore functional behaviour across all placement modes."""
+import random
+
+import pytest
+
+from repro.core import ParallaxStore, StoreConfig
+from repro.core.lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL
+
+MODES = ["parallax", "rocksdb", "blobdb", "nomerge"]
+
+
+def payload(n: int) -> bytes:
+    return (b"v" * n)
+
+
+def small_store(mode, **kw):
+    defaults = dict(mode=mode, l0_capacity=1 << 14, cache_bytes=1 << 16,
+                    segment_bytes=1 << 16, chunk_bytes=1 << 12)
+    defaults.update(kw)
+    return ParallaxStore(StoreConfig(**defaults))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_put_get_update_delete(mode):
+    st = small_store(mode)
+    st.put(b"alpha", payload(9))
+    st.put(b"beta", payload(104))
+    st.put(b"gamma", payload(1004))
+    assert st.get(b"alpha") == payload(9)
+    assert st.get(b"beta") == payload(104)
+    assert st.get(b"gamma") == payload(1004)
+    st.update(b"alpha", payload(50))
+    assert st.get(b"alpha") == payload(50)
+    st.delete(b"beta")
+    assert st.get(b"beta") is None
+    assert st.get(b"missing") is None
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_multi_level_correctness(mode):
+    st = small_store(mode, growth_factor=4)
+    oracle = {}
+    rng = random.Random(0)
+    for i in range(8000):
+        k = f"key{rng.randrange(3000):05d}".encode()
+        sz = rng.choice([9, 104, 1004])
+        st.put(k, payload(sz))
+        oracle[k] = payload(sz)
+    assert len(st.levels) >= 2, "expected a multi-level tree"
+    for k, v in oracle.items():
+        assert st.get(k) == v
+    # full scan equals sorted oracle
+    res = st.scan(b"", len(oracle) + 10)
+    assert res == sorted(oracle.items())
+
+
+def test_category_placement():
+    st = small_store("parallax", l0_capacity=1 << 20)
+    st.put(b"k" * 24, payload(9))
+    st.put(b"m" * 24, payload(104))
+    st.put(b"l" * 24, payload(1004))
+    assert st.l0[b"k" * 24].category == CAT_SMALL
+    assert st.l0[b"m" * 24].category == CAT_MEDIUM
+    assert st.l0[b"l" * 24].category == CAT_LARGE
+    assert st.l0[b"l" * 24].ptr is not None          # large goes to log at insert
+    assert st.l0[b"m" * 24].value is not None        # medium rides in L0
+
+
+def test_medium_merged_in_place_at_last_level():
+    st = small_store("parallax")
+    for i in range(3000):
+        st.put(f"key{i:06d}".encode(), payload(104))
+    # in-place zone = last merge_depth levels: entries there must hold values
+    last = st.levels[-1]
+    assert len(last) > 0
+    in_place = [e for e in last.entries if e.category == CAT_MEDIUM and e.in_place]
+    assert len(in_place) == len([e for e in last.entries if e.category == CAT_MEDIUM])
+
+
+def test_nomerge_keeps_mediums_in_log():
+    st = small_store("nomerge")
+    for i in range(3000):
+        st.put(f"key{i:06d}".encode(), payload(104))
+    assert len(st.medium_log.segments) > 0
+    last = st.levels[-1]
+    med = [e for e in last.entries if e.category == CAT_MEDIUM]
+    assert med and all(not e.in_place for e in med)
+
+
+def test_gc_reclaims_invalid_large_segments():
+    st = small_store("parallax")
+    for rounds in range(4):
+        for i in range(300):
+            st.put(f"key{i:05d}".encode(), payload(1004))
+    before = len(st.large_log.segments)
+    reclaimed = st.gc_tick()
+    assert reclaimed > 0
+    assert len(st.large_log.segments) < before
+    for i in range(300):
+        assert st.get(f"key{i:05d}".encode()) == payload(1004)
+
+
+def test_gc_noop_on_pure_inserts():
+    st = small_store("parallax")
+    for i in range(600):
+        st.put(f"key{i:05d}".encode(), payload(1004))
+    assert st.gc_tick() == 0  # nothing invalid -> no segment eligible (paper Load A)
+
+
+def test_scan_with_tombstones_and_updates():
+    st = small_store("parallax")
+    for i in range(200):
+        st.put(f"key{i:04d}".encode(), payload(104))
+    for i in range(0, 200, 2):
+        st.delete(f"key{i:04d}".encode())
+    st.update(b"key0001", payload(9))
+    res = st.scan(b"key0000", 10)
+    keys = [k for k, _ in res]
+    assert b"key0000" not in keys
+    assert res[0] == (b"key0001", payload(9))
+    assert all(int(k[3:]) % 2 == 1 for k, _ in res)
+
+
+def test_category_changing_updates():
+    """Paper §3.4: updates may change a KV's size category."""
+    st = small_store("parallax")
+    k = b"mutating-key-0123456789"
+    for size in (9, 1004, 104, 9, 1004):
+        st.update(k, payload(size))
+        assert st.get(k) == payload(size)
+    # push through compactions and re-verify
+    for i in range(2000):
+        st.put(f"fill{i:06d}".encode(), payload(104))
+    assert st.get(k) == payload(1004)
+
+
+def test_amplification_ordering_medium_load():
+    """Paper Fig. 8 trend: parallax < rocksdb for medium-dominated loads."""
+    results = {}
+    for mode in ("parallax", "rocksdb"):
+        st = small_store(mode, l0_capacity=1 << 14)
+        for i in range(4000):
+            st.put(f"key{i:06d}".encode(), payload(104))
+        results[mode] = st.amplification()
+    assert results["parallax"] < results["rocksdb"]
+
+
+def test_space_reclaimed_after_medium_merge():
+    st = small_store("parallax")
+    for i in range(4000):
+        st.put(f"key{i:06d}".encode(), payload(104))
+    # transient log only holds segments still attached to non-last levels
+    attached = {s for lvl in st.levels for s in lvl.transient_segments}
+    assert set(st.medium_log.segments).issuperset(attached)
+    live = st.medium_log.live_bytes
+    dataset = sum(e.kv_size for lvl in st.levels for e in lvl.entries)
+    assert live < dataset  # most mediums merged in place; log is bounded

@@ -1,0 +1,136 @@
+"""Hypothesis property tests: the store vs a dict oracle, and crash recovery.
+
+Invariants:
+  1. Sequential consistency: after any op sequence, get(k) == oracle[k].
+  2. Scan returns the sorted live keyspace.
+  3. Crash + recover yields the exact prefix of writes up to the returned
+     cutoff LSN (paper §3.4 semantics).
+  4. GC at any point never changes visible state.
+"""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import ParallaxStore, StoreConfig
+
+KEYS = [f"k{i:03d}".encode() for i in range(40)]
+SIZES = [5, 9, 60, 104, 300, 1004, 2500]
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.sampled_from(KEYS), st.sampled_from(SIZES)),
+        st.tuples(st.just("update"), st.sampled_from(KEYS), st.sampled_from(SIZES)),
+        st.tuples(st.just("delete"), st.sampled_from(KEYS), st.just(0)),
+        st.tuples(st.just("get"), st.sampled_from(KEYS), st.just(0)),
+        st.tuples(st.just("gc"), st.just(b""), st.just(0)),
+    ),
+    min_size=1,
+    max_size=250,
+)
+
+mode_strategy = st.sampled_from(["parallax", "rocksdb", "blobdb", "nomerge"])
+
+
+def _store(mode):
+    return ParallaxStore(StoreConfig(
+        mode=mode, l0_capacity=1 << 11, cache_bytes=1 << 14,
+        segment_bytes=1 << 14, chunk_bytes=1 << 10,
+    ))
+
+
+def _payload(k: bytes, n: int) -> bytes:
+    return (k * (n // len(k) + 1))[:n]
+
+
+@settings(max_examples=60, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy, mode=mode_strategy)
+def test_store_matches_dict_oracle(ops, mode):
+    store = _store(mode)
+    oracle = {}
+    for kind, key, size in ops:
+        if kind == "put":
+            v = _payload(key, size)
+            store.put(key, v)
+            oracle[key] = v
+        elif kind == "update":
+            v = _payload(key, size + 1)
+            store.update(key, v)
+            oracle[key] = v
+        elif kind == "delete":
+            store.delete(key)
+            oracle.pop(key, None)
+        elif kind == "get":
+            assert store.get(key) == oracle.get(key)
+        else:
+            store.gc_tick()
+    for k in KEYS:
+        assert store.get(k) == oracle.get(k)
+    assert store.scan(b"", 100) == sorted(oracle.items())
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy, mode=st.sampled_from(["parallax", "blobdb"]))
+def test_crash_recovery_is_prefix_consistent(ops, mode):
+    store = _store(mode)
+    history = []  # (lsn, key, value-or-None)
+    for kind, key, size in ops:
+        if kind == "put":
+            v = _payload(key, size)
+            store.put(key, v)
+            history.append((store.lsn, key, v))
+        elif kind == "update":
+            v = _payload(key, size + 1)
+            store.update(key, v)
+            history.append((store.lsn, key, v))
+        elif kind == "delete":
+            store.delete(key)
+            history.append((store.lsn, key, None))
+    cutoff = store.crash()
+    store.recover()
+    expect = {}
+    for lsn, key, v in history:
+        if lsn <= cutoff:
+            if v is None:
+                expect.pop(key, None)
+            else:
+                expect[key] = v
+    for k in KEYS:
+        assert store.get(k) == expect.get(k), (k, cutoff)
+
+
+@settings(max_examples=30, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_gc_preserves_visible_state(ops):
+    store = _store("parallax")
+    oracle = {}
+    for kind, key, size in ops:
+        if kind in ("put", "update"):
+            v = _payload(key, size)
+            store.put(key, v)
+            oracle[key] = v
+        elif kind == "delete":
+            store.delete(key)
+            oracle.pop(key, None)
+    before = {k: store.get(k) for k in KEYS}
+    store.gc_tick()
+    store.gc_tick()
+    after = {k: store.get(k) for k in KEYS}
+    assert before == after
+    assert after == {k: oracle.get(k) for k in KEYS}
+
+
+@settings(max_examples=30, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    sizes=st.lists(st.tuples(st.integers(1, 64), st.integers(0, 4096)), min_size=1, max_size=50),
+    t_sm=st.floats(0.05, 0.5),
+    t_ml=st.floats(0.001, 0.049),
+)
+def test_classifier_total_and_monotone(sizes, t_sm, t_ml):
+    """Classification is total and monotone in value size (for fixed key)."""
+    from repro.core.model import SizePolicy
+
+    pol = SizePolicy(t_sm=t_sm, t_ml=t_ml)
+    for klen, vlen in sizes:
+        c = pol.classify_scalar(klen, vlen)
+        assert c in (0, 1, 2)
+        bigger = pol.classify_scalar(klen, vlen + 1000)
+        assert bigger >= c  # larger value never moves toward 'small'
