@@ -6,6 +6,7 @@ failures here mean the reproduction no longer matches the paper.
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run fig1 merge  # substring filter
+    PYTHONPATH=src python -m benchmarks.run --smoke     # CI: tiny shard+ycsb
 """
 from __future__ import annotations
 
@@ -23,6 +24,7 @@ from . import (
     bench_merge,
     bench_model,
     bench_roofline,
+    bench_shard,
     bench_ycsb,
 )
 
@@ -30,6 +32,7 @@ BENCHES = [
     ("model_fig2", bench_model.main),
     ("fig1_small_kv_gc", bench_fig1.main),
     ("fig5_ycsb", bench_ycsb.main),
+    ("shard_batch_frontend", bench_shard.main),
     ("fig6_loadrun", bench_loadrun.main),
     ("fig7_medium_ablation", bench_ablation.main),
     ("thresholds_beyond_paper", bench_thresholds.main),
@@ -40,11 +43,20 @@ BENCHES = [
 ]
 
 
+# --smoke: a seconds-long CI job — just the YCSB suite and the sharded batch
+# front-end at tiny num_keys/num_ops (claims that need scale are skipped)
+SMOKE_BENCHES = [
+    ("fig5_ycsb", lambda emit: bench_ycsb.main(emit, smoke=True)),
+    ("shard_batch_frontend", lambda emit: bench_shard.main(emit, smoke=True)),
+]
+
+
 def main() -> None:
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    benches = SMOKE_BENCHES if "--smoke" in sys.argv[1:] else BENCHES
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in BENCHES:
+    for name, fn in benches:
         if filters and not any(f in name for f in filters):
             continue
         t0 = time.time()

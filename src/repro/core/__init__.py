@@ -5,11 +5,16 @@ Public surface:
 * :mod:`repro.core.model` — the paper's I/O-amplification model (Eq. 1-4, R(i))
 * :class:`repro.core.store.ParallaxStore` — the store (modes: parallax,
   rocksdb, blobdb, nomerge; MS/ML threshold variants)
-* :mod:`repro.core.ycsb` — YCSB workload generation (Table 1 mixes)
+* :mod:`repro.core.ycsb` — YCSB workload generation (Table 1 mixes) and the
+  batched ``execute`` driver
+* :class:`repro.core.shard.ShardedStore` — hash-partitioned batch front-end
+  (N independent stores, ``put_many``/``get_many``/merged ``scan``)
+* per-level bloom filters (:class:`repro.core.lsm.BloomFilter`) let point
+  reads skip levels; skips are counted in ``StoreStats.bloom_skips``
 """
 from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats
 from .logs import Log, LogEntry, Pointer, TransientLog
-from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, IndexEntry, Level
+from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, BloomFilter, IndexEntry, Level
 from .model import (
     T_ML,
     T_SM,
@@ -21,14 +26,16 @@ from .model import (
     levels_for_dataset,
     separation_benefit,
 )
+from .shard import ShardedStore, route
 from .store import ParallaxStore, StoreConfig, StoreStats
 
 __all__ = [
     "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats",
     "Log", "LogEntry", "Pointer", "TransientLog",
-    "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "IndexEntry", "Level",
+    "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
     "T_ML", "T_SM", "SizePolicy",
     "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
     "capacity_ratio", "levels_for_dataset", "separation_benefit",
     "ParallaxStore", "StoreConfig", "StoreStats",
+    "ShardedStore", "route",
 ]

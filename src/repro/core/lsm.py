@@ -13,11 +13,20 @@ size accounting for medium KVs (§3.3 last paragraph):
 
 Slot-array overhead (4 B/entry) is charged so the small-KV overhead the paper
 reports (≈8 % of leaf capacity, Fig. 6 discussion) is reproduced.
+
+Each level can additionally carry a :class:`BloomFilter` over its key set
+(rebuilt with the level on every compaction, like RocksDB's per-SST filter
+blocks).  Point reads consult the filter before the leaf probe: a negative
+answer lets the store skip the level without touching the device (the
+``bloom_skips`` counter in :class:`repro.core.store.StoreStats`).  Filters are
+in-memory and deterministic (crc32 double hashing), so they never change the
+store's visible state — only its read traffic.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
+import zlib
 
 from .logs import Pointer
 
@@ -57,16 +66,49 @@ class IndexEntry:
         return self.slot_bytes + ENTRY_HEADER + self.kv_size if not self.tombstone else self.index_size()
 
 
+class BloomFilter:
+    """Fixed-size bloom filter with crc32 double hashing (deterministic).
+
+    ``h_i(key) = h1 + i*h2 (mod nbits)`` — the standard Kirsch–Mitzenmacher
+    construction, so membership answers are identical across processes
+    regardless of ``PYTHONHASHSEED``.  May return false positives, never false
+    negatives.
+    """
+
+    __slots__ = ("nbits", "k", "_bits")
+
+    def __init__(self, num_keys: int, bits_per_key: int = 10):
+        self.nbits = max(64, num_keys * bits_per_key)
+        # optimal hash count ~= bits_per_key * ln 2
+        self.k = max(1, min(16, int(round(bits_per_key * 0.69))))
+        self._bits = bytearray((self.nbits + 7) // 8)
+
+    def _positions(self, key: bytes):
+        h1 = zlib.crc32(key)
+        h2 = zlib.crc32(key, 0x9E3779B9) | 1  # odd so strides cycle the table
+        for i in range(self.k):
+            yield (h1 + i * h2) % self.nbits
+
+    def add(self, key: bytes) -> None:
+        for pos in self._positions(key):
+            self._bits[pos >> 3] |= 1 << (pos & 7)
+
+    def __contains__(self, key: bytes) -> bool:
+        return all(self._bits[pos >> 3] & (1 << (pos & 7)) for pos in self._positions(key))
+
+
 class Level:
     """A sorted run of IndexEntry (unique keys, ascending)."""
 
-    def __init__(self, index: int):
+    def __init__(self, index: int, bloom_bits_per_key: int = 0):
         self.index = index
         self.entries: list[IndexEntry] = []
         self._keys: list[bytes] = []
         self.index_bytes = 0
         self.logical_bytes = 0
         self.transient_segments: list[int] = []  # medium-log segments attached here
+        self.bloom_bits_per_key = bloom_bits_per_key
+        self.bloom: BloomFilter | None = None
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -76,6 +118,16 @@ class Level:
         self._keys = [e.key for e in entries]
         self.index_bytes = sum(e.index_size() for e in entries)
         self.logical_bytes = sum(e.logical_size() for e in entries)
+        if self.bloom_bits_per_key > 0 and entries:
+            self.bloom = BloomFilter(len(entries), self.bloom_bits_per_key)
+            for k in self._keys:
+                self.bloom.add(k)
+        else:
+            self.bloom = None
+
+    def maybe_contains(self, key: bytes) -> bool:
+        """Filter check for point reads; True when no filter is attached."""
+        return self.bloom is None or key in self.bloom
 
     def clear(self) -> list[int]:
         segs, self.transient_segments = self.transient_segments, []

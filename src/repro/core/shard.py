@@ -1,0 +1,184 @@
+"""Sharded batch front-end: N independent ParallaxStore shards behind one API.
+
+First step from the single-store simulation toward a serving-scale system
+(ROADMAP north star; Scavenger-style placement-aware sharding on top of the
+paper's hybrid placement).  Keys are hash-partitioned with ``zlib.crc32`` —
+stable across processes, unlike ``hash()`` — so routing is deterministic and a
+key always lands on the same shard.
+
+Each shard is a full :class:`~repro.core.store.ParallaxStore` with its own
+:class:`~repro.core.io.Device`, LSM tree, logs and block cache — the model of
+one store-per-core (or per-machine) deployment.  The front-end adds:
+
+* batched ``put_many`` / ``update_many`` / ``delete_many`` / ``get_many`` that
+  group a batch by destination shard and drain each shard's sub-batch in one
+  pass (order within a shard preserves batch order, so duplicate keys in one
+  batch resolve to the last write like the sequential path);
+* merged ``scan`` across shards (each shard holds a disjoint key subset, so a
+  k-way merge of per-shard sorted results is the global sorted order);
+* aggregated stats/amplification, and a parallel device-time model
+  (``device_time`` = max over shards) used by ``benchmarks/bench_shard.py``
+  to turn byte counts into a throughput proxy for N devices.
+
+Crash/recover delegates to every shard.  Shard LSN counters are independent,
+so ``crash()`` returns the per-shard recovery cutoffs — each shard recovers
+to its own prefix; there is no single global LSN.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import zlib
+from typing import Iterable, Sequence
+
+from .io import DeviceStats
+from .store import ParallaxStore, StoreConfig, StoreStats
+
+# routing uses a different crc32 stream than bloom/cache hashing so shard
+# choice is uncorrelated with block placement inside a shard
+_ROUTE_SEED = 0xA5A5A5A5
+
+
+def route(key: bytes, num_shards: int) -> int:
+    """Deterministic shard index for a key (crc32, stable across processes)."""
+    return zlib.crc32(key, _ROUTE_SEED) % num_shards
+
+
+class ShardedStore:
+    """Hash-partitioned collection of ParallaxStores with batched APIs."""
+
+    def __init__(self, num_shards: int = 4, config: StoreConfig | None = None):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        # the front-end is bloom-filtered by default (the bare store keeps the
+        # paper's filterless index); an explicit config is taken as-is
+        self.config = config or StoreConfig(bloom_bits_per_key=10)
+        self.shards = [
+            ParallaxStore(dataclasses.replace(self.config)) for _ in range(num_shards)
+        ]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    # ---------------------------------------------------------------- routing
+    def shard_of(self, key: bytes) -> int:
+        return route(key, len(self.shards))
+
+    def shard_for(self, key: bytes) -> ParallaxStore:
+        return self.shards[self.shard_of(key)]
+
+    def _group(self, keys: Iterable[bytes]) -> dict[int, list[int]]:
+        """Batch positions grouped by shard, preserving batch order per shard."""
+        groups: dict[int, list[int]] = {}
+        for pos, key in enumerate(keys):
+            groups.setdefault(self.shard_of(key), []).append(pos)
+        return groups
+
+    # ------------------------------------------------------------- single ops
+    def put(self, key: bytes, value: bytes) -> None:
+        self.shard_for(key).put(key, value)
+
+    def update(self, key: bytes, value: bytes) -> None:
+        self.shard_for(key).update(key, value)
+
+    def delete(self, key: bytes) -> None:
+        self.shard_for(key).delete(key)
+
+    def get(self, key: bytes) -> bytes | None:
+        return self.shard_for(key).get(key)
+
+    # ------------------------------------------------------------ batched ops
+    def put_many(self, items: Sequence[tuple[bytes, bytes]]) -> None:
+        for sid, positions in self._group(k for k, _ in items).items():
+            shard = self.shards[sid]
+            for pos in positions:
+                key, value = items[pos]
+                shard.put(key, value)
+
+    def update_many(self, items: Sequence[tuple[bytes, bytes]]) -> None:
+        for sid, positions in self._group(k for k, _ in items).items():
+            shard = self.shards[sid]
+            for pos in positions:
+                key, value = items[pos]
+                shard.update(key, value)
+
+    def delete_many(self, keys: Sequence[bytes]) -> None:
+        for sid, positions in self._group(keys).items():
+            shard = self.shards[sid]
+            for pos in positions:
+                shard.delete(keys[pos])
+
+    def get_many(self, keys: Sequence[bytes]) -> list[bytes | None]:
+        out: list[bytes | None] = [None] * len(keys)
+        for sid, positions in self._group(keys).items():
+            shard = self.shards[sid]
+            for pos in positions:
+                out[pos] = shard.get(keys[pos])
+        return out
+
+    # ------------------------------------------------------------------- scan
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Global sorted scan: k-way merge of per-shard scans.
+
+        Shards partition the keyspace by hash (not range), so every shard must
+        be consulted for up to ``count`` pairs; the merge keeps the first
+        ``count`` globally.  Keys are disjoint across shards — no dedup needed.
+        """
+        per_shard = [s.scan(start, count) for s in self.shards]
+        return list(itertools.islice(heapq.merge(*per_shard), count))
+
+    # ------------------------------------------------------------ maintenance
+    def gc_tick(self, force: bool = False) -> int:
+        return sum(s.gc_tick(force=force) for s in self.shards)
+
+    def flush_all(self) -> None:
+        for s in self.shards:
+            s.flush_all()
+
+    def crash(self) -> list[int]:
+        """Crash every shard; returns the per-shard recovery cutoff LSNs.
+
+        Shard LSN counters are independent, so there is no single global
+        cutoff — each shard recovers to its own prefix (``shards[i]`` honors
+        the ``ParallaxStore.crash`` contract for cutoff ``[i]``).
+        """
+        return [s.crash() for s in self.shards]
+
+    def recover(self) -> None:
+        for s in self.shards:
+            s.recover()
+
+    # ------------------------------------------------------------------ stats
+    def aggregate_stats(self) -> StoreStats:
+        total = StoreStats()
+        for s in self.shards:
+            for f in dataclasses.fields(StoreStats):
+                setattr(total, f.name, getattr(total, f.name) + getattr(s.stats, f.name))
+        return total
+
+    def device_stats(self) -> DeviceStats:
+        total = DeviceStats()
+        for s in self.shards:
+            for f in dataclasses.fields(DeviceStats):
+                setattr(total, f.name, getattr(total, f.name) + getattr(s.device.stats, f.name))
+        return total
+
+    def amplification(self) -> float:
+        app = max(1, sum(s.stats.app_bytes for s in self.shards))
+        return sum(s.device.stats.total for s in self.shards) / app
+
+    def device_time(self) -> float:
+        """Parallel-device completion time: the slowest shard bounds the batch."""
+        return max(s.device.device_time() for s in self.shards)
+
+    def space_bytes(self) -> int:
+        return sum(s.space_bytes() for s in self.shards)
+
+    def checkpoint_stats(self) -> dict:
+        return {
+            "num_shards": self.num_shards,
+            "amplification": self.amplification(),
+            "per_shard": [s.checkpoint_stats() for s in self.shards],
+        }

@@ -18,11 +18,23 @@ The store is functionally correct (put/get/update/delete/scan with LSN
 ordering, tombstones, crash/recover) and every byte that would touch the
 device flows through :class:`repro.core.io.Device`, which is how the
 benchmarks reproduce the paper's amplification numbers.
+
+Read path: point lookups consult a per-level bloom filter (rebuilt with each
+compaction, ``StoreConfig.bloom_bits_per_key``; 0/off by default so the bare
+store reproduces the paper's filterless index) before paying the leaf probe;
+skipped levels are counted in ``StoreStats.bloom_skips``.  All hashing on the
+read path (cache-block choice, bloom probes) uses ``zlib.crc32`` so traffic
+and stats are bit-identical across processes — ``hash()`` is randomized by
+``PYTHONHASHSEED`` and must not be used here.
+
+For the sharded batch front-end layered on top of this class see
+:class:`repro.core.shard.ShardedStore`.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import zlib
 from typing import Iterable
 
 from .io import BLOCK, SEGMENT, Device
@@ -45,6 +57,7 @@ class StoreStats:
     found: int = 0
     app_bytes: int = 0          # application traffic (user KV bytes in+out)
     index_probes: int = 0       # binary-search leaf probes
+    bloom_skips: int = 0        # levels skipped by a negative bloom answer
     entries_merged: int = 0     # compaction merge work
     gc_lookups: int = 0         # GC validity lookups (paper 'lookup cost')
     gc_relocations: int = 0     # GC relocations (paper 'cleanup cost')
@@ -69,6 +82,9 @@ class StoreConfig:
     prefix_size: int = 12
     segment_bytes: int = 2 << 20         # log/level allocation granularity (§3.4)
     chunk_bytes: int = 256 << 10         # log append group-commit chunk (§3.4)
+    bloom_bits_per_key: int = 0          # per-level bloom filters (0 = off, the
+                                         # paper's index has none; ShardedStore
+                                         # and bench_shard enable 10 bits/key)
 
     def policy(self) -> SizePolicy:
         return SizePolicy(t_sm=self.t_sm, t_ml=self.t_ml, prefix_size=self.prefix_size)
@@ -219,7 +235,7 @@ class ParallaxStore:
         """Merge a sorted run (from L0 or level dst_idx-1) into levels[dst_idx]."""
         cfg = self.config
         while len(self.levels) <= dst_idx:
-            self.levels.append(Level(len(self.levels)))
+            self.levels.append(Level(len(self.levels), cfg.bloom_bits_per_key))
         dst = self.levels[dst_idx]
         self.stats.compactions += 1
         # read the lower (larger) level in full (paper Eq. 1 assumption / §3.4)
@@ -274,17 +290,27 @@ class ParallaxStore:
         self.device.sequential_write(dst.index_bytes, self.device.segment_bytes, kind="compaction")
 
     def _write_redo_record(self) -> None:
+        # The redo record must not precede the data it covers (§3.4): mediums
+        # the merge spilled to the transient log become durable first, else a
+        # crash after the record would leave durable levels with dangling
+        # medium pointers.
+        self.medium_log.flush()
         # allocation/free lists + catalog entry (§3.4) — one small append
         self.device.sequential_write(512, BLOCK, kind="log")
 
     # ------------------------------------------------------------------- gets
-    def _probe_level(self, lvl: Level, key: bytes) -> IndexEntry | None:
+    def _probe_level(self, lvl: Level, key: bytes, kind: str = "get") -> IndexEntry | None:
+        if lvl.entries and not lvl.maybe_contains(key):
+            self.stats.bloom_skips += 1
+            return None
         self.stats.index_probes += 1
         if not lvl.entries:
             return None
         base = _LEVEL_REGION * (lvl.index + 1)
-        block = base + (hash(key) % max(1, lvl.index_bytes)) // BLOCK * BLOCK
-        self.device.random_read(block, 1, kind="get")  # leaf block through cache
+        # crc32, not hash(): the modeled cache block must be stable across
+        # processes (PYTHONHASHSEED randomizes hash() for bytes)
+        block = base + (zlib.crc32(key) % max(1, lvl.index_bytes)) // BLOCK * BLOCK
+        self.device.random_read(block, 1, kind=kind)  # leaf block through cache
         return lvl.find(key)
 
     def _locate(self, key: bytes, *, kind: str = "get") -> IndexEntry | None:
@@ -292,7 +318,7 @@ class ParallaxStore:
         if entry is not None:
             return entry
         for lvl in self.levels:
-            e = self._probe_level(lvl, key)
+            e = self._probe_level(lvl, key, kind=kind)
             if e is not None:
                 return e
         return None
@@ -399,6 +425,13 @@ class ParallaxStore:
                 for le in live:
                     self.stats.gc_relocations += 1
                     self._write(le.key, le.value, tombstone=False, internal=True)
+                if live:
+                    # durability barrier: relocations must be durable before
+                    # the victim segment is freed, else a crash would expose
+                    # the shadowed level entries whose pointers dangle into
+                    # the reclaimed segment
+                    self.small_log.flush()
+                    self.large_log.flush()
                 self.large_log.reclaim(seg.segment_id)
                 self._gc_region.pop(seg.offset, None)
                 reclaimed += 1
@@ -411,11 +444,7 @@ class ParallaxStore:
         if e is not None:
             return e
         for lvl in self.levels:
-            self.stats.index_probes += 1
-            base = _LEVEL_REGION * (lvl.index + 1)
-            block = base + (hash(key) % max(1, lvl.index_bytes)) // BLOCK * BLOCK
-            self.device.random_read(block, 1, kind="gc")
-            found = lvl.find(key)
+            found = self._probe_level(lvl, key, kind="gc")
             if found is not None:
                 return found
         return None
@@ -455,6 +484,17 @@ class ParallaxStore:
                         seg.entries[slot] = None
                         seg.live_bytes -= e.size
             log._unflushed = 0
+        # The transient log is only ever referenced by compacted levels, and
+        # the redo record flushes it first, so the durable prefix is exactly
+        # the flushed bytes: drop the unflushed tail (it covers no level).
+        med = self.medium_log
+        durable_bytes = med.appended_bytes - med._unflushed
+        for seg in med.iter_segments():
+            for slot, e in enumerate(seg.entries):
+                if e is not None and e.end_off > durable_bytes:
+                    seg.entries[slot] = None
+                    seg.live_bytes -= e.size
+        med._unflushed = 0
         self._recovery_cutoff = (first_lost - 1) if first_lost is not None else self.lsn
         return self._recovery_cutoff
 

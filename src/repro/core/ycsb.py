@@ -15,6 +15,12 @@ mixes.  Operation mixes follow standard YCSB:
 Key popularity is zipfian (theta 0.99) like YCSB's default.  The generator is
 deterministic given a seed and yields batched numpy arrays so benchmarks can
 drive millions of ops without Python-loop overhead in generation.
+
+``execute`` drives any store through an op stream; with ``batch_size > 0`` it
+groups consecutive same-kind ops and dispatches them through the batched
+``put_many``/``update_many``/``get_many`` APIs of
+:class:`repro.core.shard.ShardedStore` (falling back to per-op calls for
+stores without them), preserving stream order and visible state.
 """
 from __future__ import annotations
 
@@ -130,20 +136,80 @@ def payload(size: int) -> bytes:
     return _PAYLOAD[:size]
 
 
-def execute(store, ops: Iterator[Op], gc_every: int = 0) -> dict:
-    """Drive a store through an op stream; returns op counts."""
-    counts = {"insert": 0, "update": 0, "read": 0, "scan": 0}
-    for n, op in enumerate(ops, 1):
-        if op.kind == "insert":
-            store.put(op.key, payload(op.value_size))
-        elif op.kind == "update":
-            store.update(op.key, payload(op.value_size))
-        elif op.kind == "read":
-            store.get(op.key)
+def _flush_batch(store, kind: str, batch: list[Op]) -> None:
+    """Dispatch one same-kind batch, batched API when the store has one."""
+    if not batch:
+        return
+    if kind == "insert":
+        items = [(op.key, payload(op.value_size)) for op in batch]
+        if hasattr(store, "put_many"):
+            store.put_many(items)
         else:
+            for k, v in items:
+                store.put(k, v)
+    elif kind == "update":
+        items = [(op.key, payload(op.value_size)) for op in batch]
+        if hasattr(store, "update_many"):
+            store.update_many(items)
+        else:
+            for k, v in items:
+                store.update(k, v)
+    elif kind == "read":
+        keys = [op.key for op in batch]
+        if hasattr(store, "get_many"):
+            store.get_many(keys)
+        else:
+            for k in keys:
+                store.get(k)
+    else:
+        for op in batch:
             store.scan(op.key, op.scan_len)
+
+
+def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) -> dict:
+    """Drive a store through an op stream; returns op counts.
+
+    ``batch_size == 0`` (the default) issues one call per op — the original
+    single-store path.  With ``batch_size > 0``, consecutive ops of the same
+    kind are grouped and dispatched through the store's batched APIs
+    (``put_many``/``update_many``/``get_many``, e.g.
+    :class:`repro.core.shard.ShardedStore`) when present, falling back to
+    per-op calls otherwise.  Batches never cross a kind boundary and apply in
+    stream order, so visible state is identical to the sequential path.
+    """
+    counts = {"insert": 0, "update": 0, "read": 0, "scan": 0}
+    if batch_size <= 0:
+        for n, op in enumerate(ops, 1):
+            if op.kind == "insert":
+                store.put(op.key, payload(op.value_size))
+            elif op.kind == "update":
+                store.update(op.key, payload(op.value_size))
+            elif op.kind == "read":
+                store.get(op.key)
+            else:
+                store.scan(op.key, op.scan_len)
+            counts[op.kind] += 1
+            if gc_every and n % gc_every == 0:
+                store.gc_tick()
+        store.gc_tick()
+        return counts
+
+    batch: list[Op] = []
+    kind: str | None = None
+    n = 0
+    for op in ops:
+        if kind is not None and (op.kind != kind or len(batch) >= batch_size):
+            _flush_batch(store, kind, batch)
+            batch = []
+        kind = op.kind
+        batch.append(op)
         counts[op.kind] += 1
+        n += 1
         if gc_every and n % gc_every == 0:
+            _flush_batch(store, kind, batch)
+            batch, kind = [], None
             store.gc_tick()
+    if kind is not None:
+        _flush_batch(store, kind, batch)
     store.gc_tick()
     return counts

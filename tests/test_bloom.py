@@ -1,0 +1,106 @@
+"""Per-level bloom filters: no false negatives, probe savings, state parity.
+
+Property-style tests run over many seeded-random key sets without requiring
+``hypothesis`` (tier-1 optional-deps policy: the suite must pass with only
+the baked-in toolchain).
+"""
+import random
+
+from repro.core import ParallaxStore, StoreConfig
+from repro.core.lsm import BloomFilter
+from repro.core.ycsb import make_key
+
+
+def small_store(**kw) -> ParallaxStore:
+    defaults = dict(mode="parallax", l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return ParallaxStore(StoreConfig(**defaults))
+
+
+def test_bloom_never_false_negative_property():
+    """For arbitrary key sets, every added key answers 'maybe present'."""
+    for seed in range(8):
+        rng = random.Random(seed)
+        n = rng.randrange(1, 400)
+        keys = {rng.randbytes(rng.randrange(1, 48)) for _ in range(n)}
+        bf = BloomFilter(len(keys), bits_per_key=rng.choice([4, 10, 16]))
+        for k in keys:
+            bf.add(k)
+        assert all(k in bf for k in keys)  # no false negatives, ever
+
+
+def test_bloom_false_positive_rate_is_bounded():
+    keys = [make_key(i) for i in range(2000)]
+    bf = BloomFilter(len(keys), bits_per_key=10)
+    for k in keys:
+        bf.add(k)
+    absent = [make_key(i) for i in range(10_000, 14_000)]
+    fp = sum(1 for k in absent if k in bf)
+    assert fp / len(absent) < 0.05  # ~1% expected at 10 bits/key
+
+
+def test_level_blooms_never_lose_a_key():
+    """Store-level property: with blooms on, every written key stays readable
+    across compactions (a false negative would surface as a lost key)."""
+    st = small_store(bloom_bits_per_key=10)
+    oracle = {}
+    rng = random.Random(1)
+    for i in range(4000):
+        k = f"key{rng.randrange(1500):05d}".encode()
+        v = bytes([i % 256]) * rng.choice([9, 104, 1004])
+        st.put(k, v)
+        oracle[k] = v
+    assert len(st.levels) >= 2
+    assert any(lvl.bloom is not None for lvl in st.levels)
+    for k, v in oracle.items():
+        assert st.get(k) == v
+
+
+def test_bloom_skips_levels_and_saves_probes():
+    """Missing-key gets skip every level; probe count drops vs blooms off."""
+    stats = {}
+    for bits in (0, 10):
+        st = small_store(bloom_bits_per_key=bits)
+        for i in range(3000):
+            st.put(make_key(i), b"v" * 104)
+        st.stats.index_probes = 0
+        st.stats.bloom_skips = 0
+        for i in range(500):
+            st.get(make_key(i * 7))            # present
+            st.get(make_key(50_000 + i))       # absent
+        stats[bits] = (st.stats.index_probes, st.stats.bloom_skips)
+    probes_off, skips_off = stats[0]
+    probes_on, skips_on = stats[10]
+    assert skips_off == 0
+    assert skips_on > 0
+    assert probes_on < probes_off
+    # every avoided probe is accounted as a skip (multi-level tree)
+    assert probes_on + skips_on == probes_off
+
+
+def test_bloom_on_off_visible_state_identical():
+    stores = []
+    for bits in (0, 10):
+        st = small_store(bloom_bits_per_key=bits)
+        rng = random.Random(9)
+        for _ in range(2500):
+            k = f"key{rng.randrange(800):04d}".encode()
+            if rng.random() < 0.1:
+                st.delete(k)
+            else:
+                st.put(k, bytes([rng.randrange(256)]) * rng.choice([9, 104, 1004]))
+        stores.append(st)
+    off, on = stores
+    assert off.scan(b"", 2000) == on.scan(b"", 2000)
+    for i in range(800):
+        k = f"key{i:04d}".encode()
+        assert off.get(k) == on.get(k)
+
+
+def test_bloom_disabled_leaves_levels_filterless():
+    st = small_store(bloom_bits_per_key=0)
+    for i in range(3000):
+        st.put(make_key(i), b"v" * 104)
+    assert all(lvl.bloom is None for lvl in st.levels)
+    assert st.stats.bloom_skips == 0

@@ -6,6 +6,9 @@ Invariants under arbitrary admit/extend/release interleavings:
   3. The transient arena resets to zero exactly when its last resident leaves.
   4. Admission control never corrupts state (rejected admits change nothing).
 """
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 

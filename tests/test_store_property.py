@@ -7,6 +7,9 @@ Invariants:
      cutoff LSN (paper §3.4 semantics).
   4. GC at any point never changes visible state.
 """
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
