@@ -24,7 +24,10 @@ from repro.core import ParallaxStore, ShardedStore
 from repro.core.ycsb import Workload, execute, make_key
 
 MIX = "SD"
-RUNS = ("run_a", "run_b", "run_c")
+# run E makes the hash-shard scan fan-out cost visible: every scan must probe
+# all N shards (k-way merge), the baseline bench_range's range partitioning
+# beats
+RUNS = ("run_a", "run_b", "run_c", "run_e")
 BATCH = 64
 
 

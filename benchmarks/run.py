@@ -23,6 +23,7 @@ from . import (
     bench_loadrun,
     bench_merge,
     bench_model,
+    bench_range,
     bench_roofline,
     bench_shard,
     bench_ycsb,
@@ -33,6 +34,7 @@ BENCHES = [
     ("fig1_small_kv_gc", bench_fig1.main),
     ("fig5_ycsb", bench_ycsb.main),
     ("shard_batch_frontend", bench_shard.main),
+    ("range_vs_hash_sharding", bench_range.main),
     ("fig6_loadrun", bench_loadrun.main),
     ("fig7_medium_ablation", bench_ablation.main),
     ("thresholds_beyond_paper", bench_thresholds.main),
@@ -43,11 +45,13 @@ BENCHES = [
 ]
 
 
-# --smoke: a seconds-long CI job — just the YCSB suite and the sharded batch
-# front-end at tiny num_keys/num_ops (claims that need scale are skipped)
+# --smoke: a seconds-long CI job — the YCSB suite plus both sharded
+# front-ends (hash + range) at tiny num_keys/num_ops (claims that need scale
+# are skipped); any registered bench raising fails the job (exit 1)
 SMOKE_BENCHES = [
     ("fig5_ycsb", lambda emit: bench_ycsb.main(emit, smoke=True)),
     ("shard_batch_frontend", lambda emit: bench_shard.main(emit, smoke=True)),
+    ("range_vs_hash_sharding", lambda emit: bench_range.main(emit, smoke=True)),
 ]
 
 

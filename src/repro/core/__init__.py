@@ -9,6 +9,9 @@ Public surface:
   batched ``execute`` driver
 * :class:`repro.core.shard.ShardedStore` — hash-partitioned batch front-end
   (N independent stores, ``put_many``/``get_many``/merged ``scan``)
+* :class:`repro.core.range_shard.RangeShardedStore` — range-partitioned
+  front-end (contiguous key ranges, range-local ``scan``, skew-driven
+  split/merge rebalancing with crash-safe key migration)
 * per-level bloom filters (:class:`repro.core.lsm.BloomFilter`) let point
   reads skip levels; skips are counted in ``StoreStats.bloom_skips``
 """
@@ -26,7 +29,8 @@ from .model import (
     levels_for_dataset,
     separation_benefit,
 )
-from .shard import ShardedStore, route
+from .range_shard import RangeShardedStore
+from .shard import BaseShardedStore, ShardedStore, route
 from .store import ParallaxStore, StoreConfig, StoreStats
 
 __all__ = [
@@ -37,5 +41,5 @@ __all__ = [
     "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
     "capacity_ratio", "levels_for_dataset", "separation_benefit",
     "ParallaxStore", "StoreConfig", "StoreStats",
-    "ShardedStore", "route",
+    "BaseShardedStore", "ShardedStore", "RangeShardedStore", "route",
 ]

@@ -1,0 +1,277 @@
+"""Range-partitioned sharding with skew-driven splits/merges.
+
+:class:`RangeShardedStore` partitions the keyspace into contiguous ranges —
+shard ``i`` owns ``[boundaries[i], boundaries[i+1])`` with ``boundaries[0] ==
+b""`` and the last range unbounded.  Point ops route by binary search over the
+sorted boundary list; ``scan(start, count)`` touches **only the shards whose
+range overlaps the scan** and concatenates their results (each shard's output
+is already globally ordered — no k-way merge), which is what makes range
+partitioning win scan workloads (YCSB E) where the hash-partitioned
+:class:`~repro.core.shard.ShardedStore` must fan out to all N shards.
+
+When to pick which front-end:
+
+* **hash** (``ShardedStore``) — point-op dominated workloads; crc32 routing is
+  perfectly uniform so no shard ever runs hot, but scans pay N-way fan-out.
+* **range** (this class) — scan-heavy or locality-sensitive workloads; scans
+  are range-local, but a zipfian hot-spot concentrates load on one shard, so
+  the shard map must adapt.
+
+The adaptation is skew-driven rebalancing: per-shard op counters (the shards'
+own :class:`~repro.core.store.StoreStats`) are windowed by
+:meth:`rebalance_tick`; a shard carrying more than ``split_factor`` times the
+average window load splits at its median key, and the coldest adjacent pair
+whose combined load falls under ``merge_factor`` times the average merges.
+``ycsb.execute``'s batch mode ticks the policy after every batch.
+
+Key migration rides the normal durability path (the same ordering discipline
+as GC relocation-before-reclaim, PR 1): a split **copies** the moved range
+into the new shard via ``scan_range`` + puts, **flushes the new shard's
+logs**, then atomically adopts the boundary, and only then tombstones the
+moved range out of the old shard via ``delete_range``.  A crash at any point
+is safe: before the boundary flips, the old shard is still authoritative and
+fully intact; after it flips, the new shard is durable, and any stale copies
+the crash leaves in the old shard are unreachable — routing directs their
+keys elsewhere and per-shard scans are clipped to the shard's owned range.
+Boundary updates themselves model a tiny WAL'd metadata record and survive
+``crash()``.
+
+Migration traffic is charged to the device like any other put/delete, but it
+is *internal* work: like GC relocations, it does not count toward application
+op/byte stats.
+"""
+from __future__ import annotations
+
+import bisect
+
+from .shard import BaseShardedStore
+from .store import StoreConfig
+
+
+def _uniform_boundaries(num_shards: int) -> list[bytes]:
+    """Evenly spaced 2-byte prefixes over the full byte keyspace."""
+    out = [b""]
+    for i in range(1, num_shards):
+        v = (1 << 16) * i // num_shards
+        out.append(bytes([v >> 8, v & 0xFF]))
+    return out
+
+
+class RangeShardedStore(BaseShardedStore):
+    """Contiguous key ranges over N ParallaxStores, rebalanced on skew."""
+
+    def __init__(
+        self,
+        num_shards: int = 4,
+        config: StoreConfig | None = None,
+        *,
+        boundaries: list[bytes] | None = None,
+        rebalance_window: int = 1024,
+        split_factor: float = 2.0,
+        merge_factor: float = 0.25,
+        min_split_keys: int = 32,
+        max_shards: int = 64,
+        auto_rebalance: bool = True,
+    ):
+        if boundaries is not None:
+            if not boundaries or boundaries[0] != b"":
+                raise ValueError("boundaries must start with b'' (shard 0 owns the keyspace head)")
+            if any(a >= b for a, b in zip(boundaries, boundaries[1:])):
+                raise ValueError("boundaries must be strictly increasing")
+            num_shards = len(boundaries)
+        super().__init__(num_shards, config)
+        self.boundaries = list(boundaries) if boundaries is not None else _uniform_boundaries(num_shards)
+        self.rebalance_window = rebalance_window
+        self.split_factor = split_factor
+        self.merge_factor = merge_factor
+        self.min_split_keys = min_split_keys
+        self.max_shards = max_shards
+        self.auto_rebalance = auto_rebalance
+        self.splits = 0
+        self.merges = 0
+        self.migrated_keys = 0
+        self._window_base = self._op_counts()
+
+    @classmethod
+    def for_keys(cls, keys, num_shards: int, config: StoreConfig | None = None, **kw) -> "RangeShardedStore":
+        """Balanced boundaries from a key sample (equal-population quantiles)."""
+        ks = sorted(set(keys))
+        bounds = [b""]
+        for i in range(1, num_shards):
+            b = ks[len(ks) * i // num_shards]
+            if b > bounds[-1]:
+                bounds.append(b)
+        return cls(config=config, boundaries=bounds, **kw)
+
+    # ---------------------------------------------------------------- routing
+    def shard_of(self, key: bytes) -> int:
+        return bisect.bisect_right(self.boundaries, key) - 1
+
+    def bounds(self, i: int) -> tuple[bytes, bytes | None]:
+        """Shard ``i``'s owned range ``[lo, hi)`` (``hi=None`` = unbounded)."""
+        hi = self.boundaries[i + 1] if i + 1 < len(self.boundaries) else None
+        return self.boundaries[i], hi
+
+    # ------------------------------------------------------------------- scan
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Range-local scan: only shards overlapping ``[start, ...)`` are probed.
+
+        Ranges are ordered and each shard's result is sorted, so concatenation
+        is the global sorted order — no merge.  Results are clipped to each
+        shard's owned range so stale copies left behind by a crashed migration
+        (always at or past the shard's upper bound) can never surface.
+        """
+        self.scans += 1
+        out: list[tuple[bytes, bytes]] = []
+        i = self.shard_of(start)
+        while i < len(self.shards) and len(out) < count:
+            self.scan_probes += 1
+            lo, hi = self.bounds(i)
+            for key, value in self.shards[i].scan(max(start, lo), count - len(out)):
+                if hi is not None and key >= hi:
+                    break
+                out.append((key, value))
+            i += 1
+        self._after_batch()  # scans feed the skew window like batched ops
+        return out
+
+    # ------------------------------------------------------------ batched ops
+    # batch boundaries (BaseShardedStore's batched ops and gc_tick — which is
+    # where ycsb.execute lands) are the points where the skew policy runs
+    def _after_batch(self) -> None:
+        if self.auto_rebalance:
+            self.rebalance_tick()
+
+    # ------------------------------------------------------------ rebalancing
+    def _op_counts(self) -> list[int]:
+        return [
+            s.stats.inserts + s.stats.updates + s.stats.deletes + s.stats.gets + s.stats.scans
+            for s in self.shards
+        ]
+
+    def rebalance_tick(self, force: bool = False) -> int:
+        """Evaluate the skew policy over the current op window.
+
+        Returns the number of topology changes applied (0, 1 split, 1 merge,
+        or both).  The window is the per-shard op-count delta since the last
+        evaluation; nothing happens until ``rebalance_window`` ops accumulate
+        (unless ``force``).  At most one split (the hottest qualifying shard)
+        and one merge (the coldest qualifying adjacent pair) per tick keeps
+        migrations incremental.
+        """
+        counts = self._op_counts()
+        if len(counts) != len(self._window_base):
+            # topology changed out-of-band (manual split/merge): restart window
+            self._window_base = counts
+            return 0
+        deltas = [c - b for c, b in zip(counts, self._window_base)]
+        total = sum(deltas)
+        if (total < self.rebalance_window and not force) or total <= 0:
+            return 0
+        avg = total / len(self.shards)
+
+        # decide both actions from this window's deltas before mutating
+        split_idx = None
+        if len(self.shards) < self.max_shards:
+            hot = max(range(len(deltas)), key=deltas.__getitem__)
+            # >=: a shard carrying the whole window on a 2-shard map has
+            # delta == split_factor * avg exactly and must still split; a
+            # 1-shard map has no skew signal, so any full window qualifies
+            if deltas[hot] >= self.split_factor * avg or len(self.shards) == 1:
+                split_idx = hot
+        merge_idx = None  # merge pair (merge_idx, merge_idx + 1)
+        if len(self.shards) > 1:
+            cold = min(range(len(self.shards) - 1), key=lambda i: deltas[i] + deltas[i + 1])
+            if deltas[cold] + deltas[cold + 1] < self.merge_factor * avg:
+                merge_idx = cold
+        if merge_idx is not None and split_idx is not None and merge_idx in (split_idx - 1, split_idx):
+            merge_idx = None  # never merge a shard we are about to split
+
+        changed = 0
+        if split_idx is not None and self.split(split_idx):
+            changed += 1
+            if merge_idx is not None and merge_idx > split_idx:
+                merge_idx += 1  # the split inserted a shard before the pair
+        if merge_idx is not None:
+            self.merge(merge_idx)
+            changed += 1
+        self._window_base = self._op_counts()
+        return changed
+
+    def split(self, i: int, at: bytes | None = None) -> bool:
+        """Split shard ``i`` at ``at`` (default: its median live key).
+
+        Ordering discipline (crash-safe at every step, see module docstring):
+        copy -> flush new shard -> adopt boundary -> tombstone old range.
+        """
+        src = self.shards[i]
+        lo, hi = self.bounds(i)
+        if at is None:
+            keys = src.live_keys_in(lo, hi)
+            if len(keys) < max(2, self.min_split_keys):
+                return False
+            at = keys[len(keys) // 2]
+        if at <= lo or (hi is not None and at >= hi):
+            return False
+        # 1. copy the moved range through the normal read path; writes into
+        #    the new shard are internal (not application traffic), like GC
+        #    relocations
+        dst = self._new_shard()
+        rows = src.scan_range(at, hi, internal=True)
+        for key, value in rows:
+            dst._write(key, value, tombstone=False, internal=True)
+        # 2. durability barrier: the moved data must be durable before the
+        #    boundary flips (same ordering as GC relocations before segment
+        #    reclaim — PR 1)
+        dst.flush_all()
+        # 3. atomically adopt the new topology (a tiny WAL'd metadata record)
+        self.shards.insert(i + 1, dst)
+        self.boundaries.insert(i + 1, at)
+        # 4. only now does the old shard drop the moved range (tombstones for
+        #    exactly the rows copied in step 1, through the normal write
+        #    path); a crash that loses some of these tombstones leaves stale
+        #    copies at/past the shard's new upper bound — unreachable via
+        #    routing/clipped scans
+        src.delete_range(at, hi, internal=True, keys=[k for k, _ in rows])
+        self.splits += 1
+        self.migrated_keys += len(rows)
+        self._window_base = self._op_counts()
+        return True
+
+    def merge(self, i: int) -> None:
+        """Merge shard ``i+1`` into shard ``i`` (cold-neighbor compaction).
+
+        Same ordering as :meth:`split`: copy into the surviving shard, flush
+        it, then drop the boundary; the absorbed shard is discarded wholesale
+        (no ranged delete needed — its device disappears with it).
+        """
+        left, right = self.shards[i], self.shards[i + 1]
+        lo, hi = self.bounds(i + 1)
+        # clear any stale copies a crashed earlier split left in the surviving
+        # shard beyond its boundary: extending its range would make them
+        # reachable again, resurrecting keys deleted in the absorbed shard
+        left.delete_range(lo, hi, internal=True)
+        rows = right.scan_range(lo, hi, internal=True)
+        for key, value in rows:
+            left._write(key, value, tombstone=False, internal=True)
+        left.flush_all()
+        self._retire_shard_stats(right)
+        del self.shards[i + 1]
+        del self.boundaries[i + 1]
+        self.merges += 1
+        self.migrated_keys += len(rows)
+        self._window_base = self._op_counts()
+
+    # ------------------------------------------------------------------ stats
+    def checkpoint_stats(self) -> dict:
+        out = super().checkpoint_stats()
+        out.update(
+            boundaries=list(self.boundaries),
+            splits=self.splits,
+            merges=self.merges,
+            migrated_keys=self.migrated_keys,
+        )
+        return out
+
+
+__all__ = ["RangeShardedStore"]

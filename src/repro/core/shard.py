@@ -1,24 +1,33 @@
-"""Sharded batch front-end: N independent ParallaxStore shards behind one API.
+"""Sharded batch front-ends: N independent ParallaxStore shards behind one API.
 
 First step from the single-store simulation toward a serving-scale system
 (ROADMAP north star; Scavenger-style placement-aware sharding on top of the
-paper's hybrid placement).  Keys are hash-partitioned with ``zlib.crc32`` —
-stable across processes, unlike ``hash()`` — so routing is deterministic and a
-key always lands on the same shard.
+paper's hybrid placement).  Two partitioning schemes share the plumbing here:
+
+* :class:`ShardedStore` (this module) — **hash** partitioning with
+  ``zlib.crc32`` routing: stable across processes, perfectly uniform load, but
+  no key locality — every ``scan`` must consult all N shards and k-way merge.
+* :class:`repro.core.range_shard.RangeShardedStore` — **range** partitioning:
+  shards own contiguous key ranges, so a scan touches only the shards that
+  overlap the range, at the cost of skew (hot ranges) which it repairs with
+  load-driven splits/merges.
+
+Pick hash when the workload is point-op dominated (YCSB A-D) and uniformity
+matters more than scans; pick range when scans matter (YCSB E) or when the
+shard map must adapt to hot-spots.
 
 Each shard is a full :class:`~repro.core.store.ParallaxStore` with its own
 :class:`~repro.core.io.Device`, LSM tree, logs and block cache — the model of
-one store-per-core (or per-machine) deployment.  The front-end adds:
+one store-per-core (or per-machine) deployment.  The shared base class
+:class:`BaseShardedStore` adds:
 
 * batched ``put_many`` / ``update_many`` / ``delete_many`` / ``get_many`` that
   group a batch by destination shard and drain each shard's sub-batch in one
   pass (order within a shard preserves batch order, so duplicate keys in one
   batch resolve to the last write like the sequential path);
-* merged ``scan`` across shards (each shard holds a disjoint key subset, so a
-  k-way merge of per-shard sorted results is the global sorted order);
 * aggregated stats/amplification, and a parallel device-time model
-  (``device_time`` = max over shards) used by ``benchmarks/bench_shard.py``
-  to turn byte counts into a throughput proxy for N devices.
+  (``device_time`` = max over shards) used by the shard benchmarks to turn
+  byte counts into a throughput proxy for N devices.
 
 Crash/recover delegates to every shard.  Shard LSN counters are independent,
 so ``crash()`` returns the per-shard recovery cutoffs — each shard recovers
@@ -45,8 +54,14 @@ def route(key: bytes, num_shards: int) -> int:
     return zlib.crc32(key, _ROUTE_SEED) % num_shards
 
 
-class ShardedStore:
-    """Hash-partitioned collection of ParallaxStores with batched APIs."""
+class BaseShardedStore:
+    """Partitioning-agnostic sharded front-end: batching, stats, crash/recover.
+
+    Subclasses provide the partitioning scheme by implementing
+    :meth:`shard_of` (key -> shard index) and :meth:`scan` (global sorted
+    scan); everything else — single ops, batched ops, GC, crash/recover and
+    stat aggregation — routes through those and is shared.
+    """
 
     def __init__(self, num_shards: int = 4, config: StoreConfig | None = None):
         if num_shards < 1:
@@ -54,9 +69,19 @@ class ShardedStore:
         # the front-end is bloom-filtered by default (the bare store keeps the
         # paper's filterless index); an explicit config is taken as-is
         self.config = config or StoreConfig(bloom_bits_per_key=10)
-        self.shards = [
-            ParallaxStore(dataclasses.replace(self.config)) for _ in range(num_shards)
-        ]
+        self.shards = [self._new_shard() for _ in range(num_shards)]
+        # front-end scan accounting: how many shards each scan had to consult
+        # (the fan-out cost hash partitioning pays and range partitioning
+        # avoids); survives topology changes, unlike per-shard counters
+        self.scans = 0
+        self.scan_probes = 0
+        # stats of shards retired by topology changes (range-shard merges):
+        # folded in here so aggregates never lose traffic history
+        self.retired_stats = StoreStats()
+        self.retired_device = DeviceStats()
+
+    def _new_shard(self) -> ParallaxStore:
+        return ParallaxStore(dataclasses.replace(self.config))
 
     @property
     def num_shards(self) -> int:
@@ -64,7 +89,7 @@ class ShardedStore:
 
     # ---------------------------------------------------------------- routing
     def shard_of(self, key: bytes) -> int:
-        return route(key, len(self.shards))
+        raise NotImplementedError
 
     def shard_for(self, key: bytes) -> ParallaxStore:
         return self.shards[self.shard_of(key)]
@@ -90,12 +115,17 @@ class ShardedStore:
         return self.shard_for(key).get(key)
 
     # ------------------------------------------------------------ batched ops
+    def _after_batch(self) -> None:
+        """Hook run after every batched op (and GC tick): adaptive front-ends
+        evaluate their policies here; the base class does nothing."""
+
     def put_many(self, items: Sequence[tuple[bytes, bytes]]) -> None:
         for sid, positions in self._group(k for k, _ in items).items():
             shard = self.shards[sid]
             for pos in positions:
                 key, value = items[pos]
                 shard.put(key, value)
+        self._after_batch()
 
     def update_many(self, items: Sequence[tuple[bytes, bytes]]) -> None:
         for sid, positions in self._group(k for k, _ in items).items():
@@ -103,12 +133,14 @@ class ShardedStore:
             for pos in positions:
                 key, value = items[pos]
                 shard.update(key, value)
+        self._after_batch()
 
     def delete_many(self, keys: Sequence[bytes]) -> None:
         for sid, positions in self._group(keys).items():
             shard = self.shards[sid]
             for pos in positions:
                 shard.delete(keys[pos])
+        self._after_batch()
 
     def get_many(self, keys: Sequence[bytes]) -> list[bytes | None]:
         out: list[bytes | None] = [None] * len(keys)
@@ -116,22 +148,18 @@ class ShardedStore:
             shard = self.shards[sid]
             for pos in positions:
                 out[pos] = shard.get(keys[pos])
+        self._after_batch()
         return out
 
     # ------------------------------------------------------------------- scan
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
-        """Global sorted scan: k-way merge of per-shard scans.
-
-        Shards partition the keyspace by hash (not range), so every shard must
-        be consulted for up to ``count`` pairs; the merge keeps the first
-        ``count`` globally.  Keys are disjoint across shards — no dedup needed.
-        """
-        per_shard = [s.scan(start, count) for s in self.shards]
-        return list(itertools.islice(heapq.merge(*per_shard), count))
+        raise NotImplementedError
 
     # ------------------------------------------------------------ maintenance
     def gc_tick(self, force: bool = False) -> int:
-        return sum(s.gc_tick(force=force) for s in self.shards)
+        n = sum(s.gc_tick(force=force) for s in self.shards)
+        self._after_batch()
+        return n
 
     def flush_all(self) -> None:
         for s in self.shards:
@@ -152,22 +180,31 @@ class ShardedStore:
 
     # ------------------------------------------------------------------ stats
     def aggregate_stats(self) -> StoreStats:
-        total = StoreStats()
+        total = dataclasses.replace(self.retired_stats)
         for s in self.shards:
             for f in dataclasses.fields(StoreStats):
                 setattr(total, f.name, getattr(total, f.name) + getattr(s.stats, f.name))
         return total
 
     def device_stats(self) -> DeviceStats:
-        total = DeviceStats()
+        total = dataclasses.replace(self.retired_device)
         for s in self.shards:
             for f in dataclasses.fields(DeviceStats):
                 setattr(total, f.name, getattr(total, f.name) + getattr(s.device.stats, f.name))
         return total
 
+    def _retire_shard_stats(self, shard: ParallaxStore) -> None:
+        """Fold a dropped shard's counters into the retired accumulators."""
+        for f in dataclasses.fields(StoreStats):
+            setattr(self.retired_stats, f.name,
+                    getattr(self.retired_stats, f.name) + getattr(shard.stats, f.name))
+        for f in dataclasses.fields(DeviceStats):
+            setattr(self.retired_device, f.name,
+                    getattr(self.retired_device, f.name) + getattr(shard.device.stats, f.name))
+
     def amplification(self) -> float:
-        app = max(1, sum(s.stats.app_bytes for s in self.shards))
-        return sum(s.device.stats.total for s in self.shards) / app
+        stats = self.aggregate_stats()
+        return self.device_stats().total / max(1, stats.app_bytes)
 
     def device_time(self) -> float:
         """Parallel-device completion time: the slowest shard bounds the batch."""
@@ -182,3 +219,26 @@ class ShardedStore:
             "amplification": self.amplification(),
             "per_shard": [s.checkpoint_stats() for s in self.shards],
         }
+
+
+class ShardedStore(BaseShardedStore):
+    """Hash-partitioned collection of ParallaxStores with batched APIs."""
+
+    # ---------------------------------------------------------------- routing
+    def shard_of(self, key: bytes) -> int:
+        return route(key, len(self.shards))
+
+    # ------------------------------------------------------------------- scan
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Global sorted scan: k-way merge of per-shard scans.
+
+        Shards partition the keyspace by hash (not range), so every shard must
+        be consulted for up to ``count`` pairs; the merge keeps the first
+        ``count`` globally.  Keys are disjoint across shards — no dedup needed.
+        For a front-end whose scans touch only the shards overlapping the
+        range, see :class:`repro.core.range_shard.RangeShardedStore`.
+        """
+        self.scans += 1
+        self.scan_probes += len(self.shards)
+        per_shard = [s.scan(start, count) for s in self.shards]
+        return list(itertools.islice(heapq.merge(*per_shard), count))

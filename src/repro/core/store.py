@@ -342,7 +342,22 @@ class ParallaxStore:
     # ------------------------------------------------------------------- scan
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Merge per-level scanners (newest LSN wins), return up to count pairs."""
-        self.stats.scans += 1
+        return self._scan(start, None, count)
+
+    def scan_range(self, start: bytes, end: bytes | None, *, internal: bool = False) -> list[tuple[bytes, bytes]]:
+        """All live pairs with ``start <= key < end`` (``end=None`` = no bound).
+
+        Same merged read path (and device charges) as :meth:`scan`; used by the
+        range-sharded front-end to migrate a key range during a split/merge.
+        ``internal=True`` marks it as system work (like GC lookups): the device
+        pays, but application op/byte stats are untouched.
+        """
+        return self._scan(start, end, None, internal=internal)
+
+    def _scan(self, start: bytes, end: bytes | None, count: int | None, *, internal: bool = False) -> list[tuple[bytes, bytes]]:
+        if not internal:
+            self.stats.scans += 1
+        limit = count if count is not None else (1 << 62)
         iters: list[Iterable[IndexEntry]] = []
         l0_items = [self.l0[k] for k in sorted(self.l0) if self.l0[k].key >= start]
         iters.append(iter(l0_items))
@@ -357,8 +372,11 @@ class ParallaxStore:
         out: list[tuple[bytes, bytes]] = []
         last_key: bytes | None = None
         scanned_bytes = [0] * len(its)
-        while heap and len(out) < count:
+        while heap and len(out) < limit:
             key, _, src, e = heapq.heappop(heap)
+            if end is not None and key >= end:
+                # sources are sorted, so this source is exhausted for the range
+                continue
             nxt = next(its[src], None)
             if nxt is not None:
                 heapq.heappush(heap, (nxt.key, -nxt.lsn, src, nxt))
@@ -374,9 +392,56 @@ class ParallaxStore:
                 self.device.random_read(base, e.index_size(), kind="get")
                 scanned_bytes[src] += e.index_size()
             value = self._value_of(e)
-            self.stats.app_bytes += len(key) + len(value)
+            if not internal:
+                self.stats.app_bytes += len(key) + len(value)
             out.append((key, value))
         return out
+
+    # ---------------------------------------------------------- ranged delete
+    def live_keys_in(self, start: bytes, end: bytes | None) -> list[bytes]:
+        """Sorted live (non-tombstone, newest-LSN) keys in ``[start, end)``.
+
+        Pure index walk — no device traffic is charged; callers that read the
+        values pay through :meth:`scan_range`, callers that delete pay through
+        the normal write path.
+        """
+        best: dict[bytes, IndexEntry] = {}
+        sources: list[Iterable[IndexEntry]] = [
+            iter([self.l0[k] for k in sorted(self.l0)])
+        ]
+        sources.extend(lvl.iter_from(start) for lvl in self.levels)
+        for src in sources:
+            for e in src:
+                if e.key < start:
+                    continue
+                if end is not None and e.key >= end:
+                    break
+                cur = best.get(e.key)
+                if cur is None or e.lsn > cur.lsn:
+                    best[e.key] = e
+        return sorted(k for k, e in best.items() if not e.tombstone)
+
+    def delete_range(self, start: bytes, end: bytes | None, *, internal: bool = False,
+                     keys: list[bytes] | None = None) -> int:
+        """Tombstone every live key in ``[start, end)``; returns keys deleted.
+
+        Each delete flows through the normal write path (WAL append, L0,
+        flush/compaction), so a ranged delete obeys the same durability
+        ordering as individual deletes — this is the migration hook the
+        range-sharded front-end uses when a shard drops part of its range.
+        ``internal=True`` marks the tombstones as system work (migration/GC
+        style): charged to the device but not to application op/byte stats.
+        A caller that already materialized the range (e.g. the scan side of a
+        migration) passes ``keys`` to skip the index walk.
+        """
+        if keys is None:
+            keys = self.live_keys_in(start, end)
+        for k in keys:
+            if internal:
+                self._write(k, b"", tombstone=True, internal=True)
+            else:
+                self.delete(k)
+        return len(keys)
 
     # --------------------------------------------------------------------- GC
     def gc_tick(self, force: bool = False) -> int:

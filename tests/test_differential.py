@@ -1,0 +1,136 @@
+"""Differential store oracle: one logical history, three physical layouts.
+
+The same YCSB op stream is replayed through a bare :class:`ParallaxStore`, the
+hash-partitioned :class:`ShardedStore`, and the range-partitioned
+:class:`RangeShardedStore` (with its skew rebalancer live), and the three must
+agree byte-for-byte on every get, every scan, and the final live key set —
+partitioning, batching, bloom filters and split/merge migration are all
+invisible to correctness.  A crash/recover in the middle of a rebalance must
+not break the agreement either (acceptance criterion for PR 2).
+
+A hypothesis stateful version drives random op interleavings against a dict
+model when hypothesis is installed (optional-deps policy: importorskip) —
+see ``tests/test_differential_stateful.py``; this module's deterministic
+streams always run.
+"""
+import pytest
+
+from repro.core import ParallaxStore, RangeShardedStore, ShardedStore, StoreConfig
+from repro.core.ycsb import Workload, execute, make_key, payload
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def make_fleet(num_keys: int, num_shards: int = 3, rebalance_window: int = 200, **range_kw):
+    """The three front-ends under differential test, bare store first."""
+    return {
+        "bare": ParallaxStore(small_config()),
+        "hash": ShardedStore(num_shards, small_config(bloom_bits_per_key=10)),
+        "range": RangeShardedStore.for_keys(
+            [make_key(i) for i in range(num_keys)], num_shards,
+            small_config(bloom_bits_per_key=10),
+            rebalance_window=rebalance_window, **range_kw,
+        ),
+    }
+
+
+def replay(fleet: dict, ops_factory) -> None:
+    """Replay one op stream into every store (fresh iterator per store)."""
+    for name, store in fleet.items():
+        execute(store, ops_factory(), batch_size=0 if name == "bare" else 32)
+
+
+def assert_agree(fleet: dict, num_keys: int) -> None:
+    bare = fleet["bare"]
+    probe = [make_key(i) for i in range(num_keys + 50)]
+    expect_gets = [bare.get(k) for k in probe]
+    full = bare.scan(b"", 2 * num_keys + 100)
+    # the full scan *is* the final live key set (sorted, each key once)
+    keys_only = [k for k, _ in full]
+    assert keys_only == sorted(set(keys_only))
+    for name, store in fleet.items():
+        if name == "bare":
+            continue
+        got = store.get_many(probe)
+        assert got == expect_gets, f"{name}: get mismatch"
+        assert store.scan(b"", 2 * num_keys + 100) == full, f"{name}: full scan mismatch"
+        for start, count in ((make_key(num_keys // 3), 40), (make_key(num_keys - 5), 30), (b"", 7)):
+            assert store.scan(start, count) == bare.scan(start, count), (name, start)
+
+
+def test_differential_load_and_point_ops():
+    fleet = make_fleet(900)
+    replay(fleet, lambda: Workload("load_a", "SD", num_keys=900, num_ops=0, seed=21).load_ops())
+    replay(fleet, lambda: Workload("run_a", "SD", num_keys=900, num_ops=500, seed=21).run_ops())
+    assert_agree(fleet, 900)
+
+
+def test_differential_scan_heavy_with_live_rebalancer():
+    # a hair-trigger policy so the balanced pre-split still splits/merges
+    # under the mild residual skew of the scattered zipfian hot keys
+    fleet = make_fleet(800, rebalance_window=150, split_factor=1.05, merge_factor=0.9)
+    replay(fleet, lambda: Workload("load_e", "SD", num_keys=800, num_ops=0, seed=22).load_ops())
+    replay(fleet, lambda: Workload("run_e", "SD", num_keys=800, num_ops=400, seed=22).run_ops())
+    # the oracle is only interesting if the range topology actually moved
+    assert fleet["range"].splits + fleet["range"].merges > 0
+    assert_agree(fleet, 800 + 400)  # run_e inserts new keys past num_keys
+
+
+def test_differential_deletes_and_reinserts():
+    fleet = make_fleet(600)
+    replay(fleet, lambda: Workload("load_a", "MD", num_keys=600, num_ops=0, seed=23).load_ops())
+    doomed = [make_key(i) for i in range(100, 300, 2)]
+    for name, store in fleet.items():
+        if name == "bare":
+            for k in doomed:
+                store.delete(k)
+        else:
+            store.delete_many(doomed)
+    back = [(make_key(i), payload(104)) for i in range(150, 250, 4)]
+    for name, store in fleet.items():
+        if name == "bare":
+            for k, v in back:
+                store.put(k, v)
+        else:
+            store.put_many(back)
+    assert_agree(fleet, 600)
+
+
+class _CrashNow(Exception):
+    pass
+
+
+def test_differential_crash_mid_rebalance():
+    """Acceptance: the three stores still agree after a crash/recover that
+    interrupts a range-shard split between the boundary flip and the old
+    shard dropping its migrated range."""
+    fleet = make_fleet(700)
+    replay(fleet, lambda: Workload("load_a", "SD", num_keys=700, num_ops=0, seed=24).load_ops())
+    for store in fleet.values():
+        store.flush_all()  # equalize durability: crash loses nothing anywhere
+
+    rng = fleet["range"]
+    victim = max(
+        range(rng.num_shards),
+        key=lambda i: len(rng.shards[i].live_keys_in(*rng.bounds(i))),
+    )
+    src = rng.shards[victim]
+    src.delete_range = lambda *a, **kw: (_ for _ in ()).throw(_CrashNow())
+    with pytest.raises(_CrashNow):
+        rng.split(victim)  # migrated data is durable, boundary flipped,
+    del src.delete_range   # ... crash hits before the old range is dropped
+    assert rng.num_shards == 4  # the split's metadata did land
+
+    for store in fleet.values():
+        store.crash()
+        store.recover()
+    assert_agree(fleet, 700)
+
+    # the fleet keeps running (and the interrupted shard keeps serving)
+    replay(fleet, lambda: Workload("run_a", "SD", num_keys=700, num_ops=300, seed=25).run_ops())
+    assert_agree(fleet, 700)

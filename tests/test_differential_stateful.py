@@ -1,0 +1,88 @@
+"""Hypothesis stateful differential oracle (optional-deps policy: skips
+without hypothesis; the deterministic streams in ``test_differential.py``
+always run).
+
+Random op interleavings — puts, updates, deletes, forced rebalances — drive a
+bare ParallaxStore, a hash-ShardedStore and a RangeShardedStore alongside a
+plain dict model; every get, scan and the full key set must agree at every
+step.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import RuleBasedStateMachine, initialize, invariant, rule  # noqa: E402
+
+from repro.core.ycsb import make_key, payload  # noqa: E402
+
+from test_differential import make_fleet  # noqa: E402
+
+_KEYS = st.integers(min_value=0, max_value=80)
+_SIZES = st.sampled_from([9, 104, 1004])
+
+
+class DifferentialMachine(RuleBasedStateMachine):
+    """Random op interleavings: three stores + a dict model must agree."""
+
+    @initialize()
+    def setup(self):
+        self.fleet = make_fleet(90, num_shards=2, rebalance_window=60)
+        self.model: dict[bytes, bytes] = {}
+        self.n = 0
+
+    def _everywhere(self, fn):
+        for store in self.fleet.values():
+            fn(store)
+
+    @rule(i=_KEYS, size=_SIZES)
+    def put(self, i, size):
+        self.n += 1
+        k, v = make_key(i), (b"%6d|" % self.n) + payload(size)
+        self._everywhere(lambda s: s.put(k, v))
+        self.model[k] = v
+
+    @rule(i=_KEYS, size=_SIZES)
+    def update(self, i, size):
+        self.n += 1
+        k, v = make_key(i), (b"%6d~" % self.n) + payload(size)
+        self._everywhere(lambda s: s.update(k, v))
+        self.model[k] = v
+
+    @rule(i=_KEYS)
+    def delete(self, i):
+        k = make_key(i)
+        self._everywhere(lambda s: s.delete(k))
+        self.model.pop(k, None)
+
+    @rule(i=_KEYS)
+    def get_agrees(self, i):
+        k = make_key(i)
+        expect = self.model.get(k)
+        for name, store in self.fleet.items():
+            assert store.get(k) == expect, name
+
+    @rule(i=_KEYS, count=st.integers(min_value=1, max_value=30))
+    def scan_agrees(self, i, count):
+        start = make_key(i)
+        expect = sorted((k, v) for k, v in self.model.items() if k >= start)[:count]
+        for name, store in self.fleet.items():
+            assert store.scan(start, count) == expect, name
+
+    @rule()
+    def rebalance(self):
+        self.fleet["range"].rebalance_tick(force=True)
+
+    @invariant()
+    def key_sets_agree(self):
+        if not hasattr(self, "fleet"):
+            return  # invariant fires before @initialize on some versions
+        expect = sorted(self.model)
+        for name, store in self.fleet.items():
+            got = [k for k, _ in store.scan(b"", 500)]
+            assert got == expect, name
+
+
+DifferentialMachine.TestCase.settings = settings(
+    max_examples=15, stateful_step_count=25, deadline=None
+)
+TestDifferentialStateful = DifferentialMachine.TestCase

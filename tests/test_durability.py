@@ -1,21 +1,29 @@
 """Redo/durability ordering and cross-process determinism.
 
-Covers the two seed bugs fixed in this PR:
+Covers the two seed bugs fixed in PR 1:
 
 * the redo record is only written after the transient (medium) log is flushed,
   and ``crash()`` drops any unflushed medium-log tail — so durable levels can
   never hold pointers into lost log bytes;
 * the read path hashes with ``zlib.crc32`` instead of the per-process
   randomized ``hash()``, so amplification/stats are identical across runs.
+
+PR 2 extends the same ordering discipline to range-shard rebalancing: a split
+copies the moved range, flushes the new shard, flips the boundary, and only
+then tombstones the old range — so a crash in any migration window loses no
+key and duplicates no key on either side of the moved boundary.
 """
 import os
 import pathlib
 import subprocess
 import sys
 
-from repro.core import ParallaxStore, StoreConfig
+import pytest
+
+from repro.core import ParallaxStore, RangeShardedStore, StoreConfig
 from repro.core.logs import LogEntry
 from repro.core.lsm import CAT_MEDIUM
+from repro.core.ycsb import make_key
 
 
 def small_store(**kw) -> ParallaxStore:
@@ -103,6 +111,125 @@ def test_gc_relocations_durable_before_segment_reclaim():
     for i in range(200):
         v = st.get(f"user{i:05d}".encode())
         assert v is None or v == b"L" * 1004
+
+
+# --------------------------------------------------- rebalancing crash windows
+
+class _CrashNow(Exception):
+    pass
+
+
+def _loaded_range_store(n_keys=600) -> RangeShardedStore:
+    cfg = StoreConfig(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                      segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    st = RangeShardedStore.for_keys(
+        [make_key(i) for i in range(n_keys)], 2, cfg, auto_rebalance=False,
+    )
+    st.put_many([(make_key(i), b"m" * 104) for i in range(n_keys)])
+    st.flush_all()  # a clean durable base: the crash loses only migration work
+    return st
+
+
+def _assert_no_lost_or_dup(st: RangeShardedStore, n_keys: int) -> None:
+    """Every key readable with its value; the global scan holds each exactly once."""
+    for i in range(n_keys):
+        assert st.get(make_key(i)) == b"m" * 104, i
+    keys = [k for k, _ in st.scan(b"", 2 * n_keys)]
+    assert keys == [make_key(i) for i in range(n_keys)]  # sorted, no dups
+
+
+def test_crash_before_boundary_flip_keeps_old_shard_authoritative():
+    """Window A: crash after the copy but before the new shard is adopted —
+    the split aborts, the old shard still owns and serves the whole range."""
+    st = _loaded_range_store()
+    orig_new_shard = st._new_shard
+
+    def exploding_new_shard():
+        dst = orig_new_shard()
+        dst.flush_all = lambda: (_ for _ in ()).throw(_CrashNow())
+        return dst
+
+    st._new_shard = exploding_new_shard
+    with pytest.raises(_CrashNow):
+        st.split(0)
+    st._new_shard = orig_new_shard
+    assert st.num_shards == 2  # metadata never flipped
+    st.crash()
+    st.recover()
+    _assert_no_lost_or_dup(st, 600)
+
+
+def test_crash_after_boundary_flip_before_ranged_delete():
+    """Window B: the new shard is durable and adopted, but the old shard never
+    dropped the moved range — stale copies must be unreachable."""
+    st = _loaded_range_store()
+    src = st.shards[0]
+    src.delete_range = lambda *a, **kw: (_ for _ in ()).throw(_CrashNow())
+    with pytest.raises(_CrashNow):
+        st.split(0)
+    del src.delete_range
+    assert st.num_shards == 3  # boundary flipped before the crash
+    st.crash()
+    st.recover()
+    _assert_no_lost_or_dup(st, 600)
+    # the stale copies really are still in the old shard (unflushed deletes
+    # never happened), proving the clipping/routing is what protects reads
+    lo, hi = st.bounds(0)
+    assert st.shards[0].live_keys_in(hi, None), "expected stale migrated copies"
+
+
+def test_crash_mid_ranged_delete_drops_unflushed_tombstones():
+    """Window C: the crash hits while the old shard is tombstoning the moved
+    range — unflushed tombstones are lost, resurrecting stale copies, which
+    must stay invisible on both sides of the boundary."""
+    st = _loaded_range_store()
+    assert st.split(0)  # full split: copy + flip + ranged delete (unflushed)
+    st.crash()          # some tombstones above the boundary may be lost
+    st.recover()
+    _assert_no_lost_or_dup(st, 600)
+    # and the topology keeps rebalancing cleanly afterwards
+    st.merge(0)
+    _assert_no_lost_or_dup(st, 600)
+
+
+def test_merge_after_crashed_split_cannot_resurrect_deleted_keys():
+    """A merge that re-extends a shard's range over stale copies left by a
+    crashed split must not resurrect keys deleted in the absorbed shard."""
+    st = _loaded_range_store()
+    src = st.shards[0]
+    src.delete_range = lambda *a, **kw: (_ for _ in ()).throw(_CrashNow())
+    with pytest.raises(_CrashNow):
+        st.split(0)  # window B: boundary flipped, stale copies remain in src
+    del src.delete_range
+    st.crash()
+    st.recover()
+    # delete a migrated key: the tombstone lands in the new owner (shard 1)
+    victim = st.boundaries[1]
+    assert st.shard_of(victim) == 1
+    st.delete(victim)
+    assert st.get(victim) is None
+    # absorbing shard 1 back must not expose shard 0's stale copy of victim
+    st.merge(0)
+    assert st.get(victim) is None, "crashed-split stale copy resurrected"
+    keys = [k for k, _ in st.scan(b"", 1200)]
+    assert victim not in keys
+    assert keys == sorted(set(keys))
+
+
+def test_migration_is_internal_work_not_application_traffic():
+    """Split/merge migration charges the device but never application stats
+    (same accounting discipline as GC relocations), so amplification
+    comparisons between hash and range sharding stay honest."""
+    st = _loaded_range_store()
+    agg0 = st.aggregate_stats()
+    dev0 = st.device_stats()
+    assert st.split(0)
+    st.merge(0)
+    agg = st.aggregate_stats()
+    assert agg.app_bytes == agg0.app_bytes
+    assert agg.scans == agg0.scans
+    assert agg.inserts == agg0.inserts and agg.deletes == agg0.deletes
+    assert st.device_stats().total > dev0.total  # the device did pay
 
 
 _DETERMINISM_SCRIPT = r"""

@@ -1,0 +1,170 @@
+"""RangeShardedStore: bisect routing, range-local scans, split/merge migration."""
+import dataclasses
+
+import pytest
+
+from repro.core import ParallaxStore, RangeShardedStore, StoreConfig
+from repro.core.ycsb import Workload, execute, make_key
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def store_with_keys(n_keys=600, n_shards=4, **kw) -> RangeShardedStore:
+    keys = [make_key(i) for i in range(n_keys)]
+    st = RangeShardedStore.for_keys(keys, n_shards, small_config(), **kw)
+    st.put_many([(k, b"v" * 60) for k in keys])
+    return st
+
+
+def test_boundary_routing_is_bisect_over_sorted_boundaries():
+    st = RangeShardedStore(boundaries=[b"", b"b", b"m"], config=small_config())
+    assert st.shard_of(b"") == 0
+    assert st.shard_of(b"a") == 0
+    assert st.shard_of(b"b") == 1  # boundaries are inclusive lower bounds
+    assert st.shard_of(b"lzzz") == 1
+    assert st.shard_of(b"m") == 2
+    assert st.shard_of(b"\xff") == 2
+    # routing is stable: the same key always lands on the same shard
+    assert [st.shard_of(b"qq") for _ in range(3)] == [2, 2, 2]
+
+
+def test_invalid_boundaries_rejected():
+    with pytest.raises(ValueError):
+        RangeShardedStore(boundaries=[b"a", b"b"], config=small_config())
+    with pytest.raises(ValueError):
+        RangeShardedStore(boundaries=[b"", b"m", b"b"], config=small_config())
+    with pytest.raises(ValueError):
+        RangeShardedStore(0, small_config())
+
+
+def test_shards_own_contiguous_disjoint_ranges():
+    st = store_with_keys(500, 4, auto_rebalance=False)
+    per_shard = [
+        {k for k, _ in s.scan(b"", 1000)} for s in st.shards
+    ]
+    assert sum(len(ks) for ks in per_shard) == 500
+    # contiguity: every shard's max key < next shard's min key
+    mins_maxs = [(min(ks), max(ks)) for ks in per_shard if ks]
+    for (_, hi), (lo, _) in zip(mins_maxs, mins_maxs[1:]):
+        assert hi < lo
+
+
+def test_scan_probes_only_overlapping_shards():
+    """Acceptance: per-shard StoreStats.scans shows range-local scan probing."""
+    st = store_with_keys(600, 4, auto_rebalance=False)
+    for s in st.shards:
+        s.stats.scans = 0
+    # a short scan inside one shard's range touches exactly that shard
+    got = st.scan(make_key(10), 20)
+    assert [k for k, _ in got] == [make_key(i) for i in range(10, 30)]
+    assert [s.stats.scans for s in st.shards] == [1, 0, 0, 0]
+    # a scan spanning a boundary touches exactly the two overlapping shards
+    for s in st.shards:
+        s.stats.scans = 0
+    st.scan(make_key(140), 20)  # 600 keys / 4 shards -> boundary at 150
+    assert [s.stats.scans for s in st.shards] == [1, 1, 0, 0]
+    # front-end fan-out counters agree
+    assert st.scans == 2 and st.scan_probes == 3
+
+
+def test_scan_concatenation_is_globally_sorted_and_complete():
+    st = store_with_keys(400, 4, auto_rebalance=False)
+    bare = ParallaxStore(small_config())
+    for i in range(400):
+        bare.put(make_key(i), b"v" * 60)
+    assert st.scan(b"", 500) == bare.scan(b"", 500)
+    assert st.scan(make_key(95), 50) == bare.scan(make_key(95), 50)
+    assert st.scan(make_key(399), 10) == bare.scan(make_key(399), 10)
+
+
+def test_split_migrates_and_preserves_results():
+    st = store_with_keys(300, 2, auto_rebalance=False)
+    expect = st.scan(b"", 400)
+    assert st.split(0)
+    assert st.num_shards == 3
+    assert st.splits == 1 and st.migrated_keys > 0
+    assert st.scan(b"", 400) == expect
+    assert all(st.get(make_key(i)) == b"v" * 60 for i in range(300))
+    # the migrated range is really gone from the source shard (post-split
+    # boundary excludes it, and the tombstones land eventually)
+    lo, hi = st.bounds(0)
+    assert st.shards[0].live_keys_in(hi, None) == []
+
+
+def test_merge_absorbs_cold_neighbor():
+    st = store_with_keys(300, 4, auto_rebalance=False)
+    expect = st.scan(b"", 400)
+    st.merge(1)
+    assert st.num_shards == 3
+    assert st.merges == 1
+    assert st.scan(b"", 400) == expect
+    assert all(st.get(make_key(i)) == b"v" * 60 for i in range(300))
+    # aggregate stats keep the retired shard's history
+    assert st.aggregate_stats().inserts == 300
+
+
+def test_skew_driven_rebalance_splits_hot_shard():
+    """A degenerate map (all keys in one shard) is repaired by observed load."""
+    cfg = small_config(bloom_bits_per_key=10)
+    st = RangeShardedStore(4, cfg, rebalance_window=200, max_shards=16)
+    # default uniform byte boundaries: every YCSB key lands in one shard
+    owners = {st.shard_of(make_key(i)) for i in range(500)}
+    assert len(owners) == 1
+    w = Workload("load_a", "SD", num_keys=800, num_ops=0, seed=11)
+    execute(st, w.load_ops(), batch_size=32)
+    r = Workload("run_e", "SD", num_keys=800, num_ops=400, seed=11)
+    execute(st, r.run_ops(), batch_size=32)
+    assert st.splits > 0
+    populated = sum(
+        1 for i, s in enumerate(st.shards) if s.live_keys_in(*st.bounds(i))
+    )
+    assert populated > 1
+
+
+def test_rebalance_preserves_every_result():
+    """With the rebalancer live, results match a bare single store exactly."""
+    cfg = small_config(bloom_bits_per_key=10)
+    st = RangeShardedStore(2, cfg, rebalance_window=150)
+    bare = ParallaxStore(small_config())
+    w = Workload("load_a", "SD", num_keys=900, num_ops=0, seed=4)
+    execute(st, w.load_ops(), batch_size=32)
+    execute(bare, w.load_ops())
+    r = Workload("run_a", "SD", num_keys=900, num_ops=500, seed=4)
+    execute(st, r.run_ops(), batch_size=32)
+    execute(bare, r.run_ops())
+    assert st.splits + st.merges > 0, "policy must have fired for this test to bite"
+    keys = [make_key(i) for i in range(950)]
+    assert st.get_many(keys) == [bare.get(k) for k in keys]
+    assert st.scan(b"", 1000) == bare.scan(b"", 1000)
+
+
+def test_crash_recover_after_rebalance():
+    st = store_with_keys(400, 2, auto_rebalance=False)
+    st.split(0)
+    st.split(1)
+    st.merge(0)
+    st.flush_all()
+    cutoffs = st.crash()
+    st.recover()
+    assert len(cutoffs) == st.num_shards
+    assert all(st.get(make_key(i)) == b"v" * 60 for i in range(400))
+    assert [k for k, _ in st.scan(b"", 500)] == [make_key(i) for i in range(400)]
+
+
+def test_delete_range_hook():
+    bare = ParallaxStore(small_config())
+    for i in range(200):
+        bare.put(make_key(i), b"v" * 30)
+    n = bare.delete_range(make_key(50), make_key(150))
+    assert n == 100
+    assert bare.live_keys_in(b"", None) == [make_key(i) for i in list(range(50)) + list(range(150, 200))]
+    assert bare.get(make_key(60)) is None
+    assert bare.get(make_key(150)) == b"v" * 30
+    # scan_range honors [start, end) on the read side
+    rows = bare.scan_range(make_key(10), make_key(49))
+    assert [k for k, _ in rows] == [make_key(i) for i in range(10, 49)]

@@ -1,4 +1,8 @@
 """ShardedStore: routing determinism, batched-vs-sequential equivalence."""
+import os
+import pathlib
+import subprocess
+import sys
 import zlib
 
 import pytest
@@ -107,6 +111,35 @@ def test_crash_recover_delegates_to_every_shard():
     assert cutoffs == [s.lsn for s in st.shards]
     # flushed before crash: every write survives on every shard
     assert st.get_many([k for k, _ in items]) == [v for _, v in items]
+
+
+_STREAM_SCRIPT = r"""
+from repro.core.shard import route
+from repro.core.ycsb import Workload, ZipfGenerator
+
+z = ZipfGenerator(5000, seed=9)
+print(z.sample(2000).tolist())
+ops = list(Workload("run_e", "SD", num_keys=1000, num_ops=400, seed=5).run_ops())
+print([(op.kind, op.key.decode(), op.value_size) for op in ops])
+print([route(op.key, 4) for op in ops])
+"""
+
+
+def test_op_stream_and_routing_deterministic_across_processes():
+    """ZipfGenerator samples, the generated op stream, and the shard
+    assignment must be bit-identical across processes regardless of
+    PYTHONHASHSEED (mirrors PR 1's crc32 determinism test: benchmarks and
+    the differential oracle rely on replaying the exact same stream)."""
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    outputs = []
+    for seed in ("1", "31337"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _STREAM_SCRIPT],
+            capture_output=True, text=True, check=True,
+            env={**os.environ, "PYTHONPATH": src, "PYTHONHASHSEED": seed},
+        )
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1]
 
 
 def test_aggregate_stats_sums_shards():
