@@ -11,13 +11,19 @@ Public surface:
   (N independent stores, ``put_many``/``get_many``/merged ``scan``)
 * :class:`repro.core.range_shard.RangeShardedStore` — range-partitioned
   front-end (contiguous key ranges, range-local ``scan``, skew-driven
-  split/merge rebalancing with crash-safe key migration)
+  split/merge rebalancing whose key migration is incremental — double-routed
+  reads, per-batch ticks — and whose topology is backed by a persistent
+  shard-metadata WAL)
+* :class:`repro.core.metalog.MetadataLog` — the shard-metadata WAL
+  (synchronous boundary/migration records, replayed by recovery;
+  ``crash_after`` fault-injection hook for the crash-point harness)
 * per-level bloom filters (:class:`repro.core.lsm.BloomFilter`) let point
   reads skip levels; skips are counted in ``StoreStats.bloom_skips``
 """
 from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats
 from .logs import Log, LogEntry, Pointer, TransientLog
 from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, BloomFilter, IndexEntry, Level
+from .metalog import CrashPoint, MetadataLog
 from .model import (
     T_ML,
     T_SM,
@@ -29,7 +35,7 @@ from .model import (
     levels_for_dataset,
     separation_benefit,
 )
-from .range_shard import RangeShardedStore
+from .range_shard import MigrationState, RangeShardedStore
 from .shard import BaseShardedStore, ShardedStore, route
 from .store import ParallaxStore, StoreConfig, StoreStats
 
@@ -37,9 +43,10 @@ __all__ = [
     "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats",
     "Log", "LogEntry", "Pointer", "TransientLog",
     "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
+    "CrashPoint", "MetadataLog",
     "T_ML", "T_SM", "SizePolicy",
     "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
     "capacity_ratio", "levels_for_dataset", "separation_benefit",
     "ParallaxStore", "StoreConfig", "StoreStats",
-    "BaseShardedStore", "ShardedStore", "RangeShardedStore", "route",
+    "BaseShardedStore", "ShardedStore", "MigrationState", "RangeShardedStore", "route",
 ]

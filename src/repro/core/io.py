@@ -41,6 +41,7 @@ class DeviceStats:
     compaction_read: int = 0
     compaction_written: int = 0
     log_written: int = 0
+    meta_written: int = 0       # shard-metadata WAL records (boundary/migration)
     get_read: int = 0
 
     @property
@@ -152,6 +153,8 @@ class Device:
             self.stats.compaction_written += nbytes
         elif kind == "log":
             self.stats.log_written += nbytes
+        elif kind == "meta":
+            self.stats.meta_written += nbytes
 
     # -- modeled operations --------------------------------------------------
     def random_read(self, offset: int, nbytes: int, kind: str = "get") -> None:

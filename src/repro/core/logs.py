@@ -65,9 +65,11 @@ class Segment:
 class Log:
     """Append-only segmented log with chunked device writes."""
 
-    def __init__(self, device: Device, name: str):
+    def __init__(self, device: Device, name: str, kind: str = "log"):
         self.device = device
         self.name = name
+        self.kind = kind  # device-stat attribution ('log' for value logs,
+        #                   'meta' for the shard-metadata WAL)
         self.segments: dict[int, Segment] = {}
         self._next_segment_id = 0
         self._tail: Segment | None = None
@@ -94,13 +96,13 @@ class Log:
         # chunk-granularity group commit (256 KB default)
         chunk = self.device.chunk_bytes
         while self._unflushed >= chunk:
-            self.device.sequential_write(chunk, chunk, kind="log")
+            self.device.sequential_write(chunk, chunk, kind=self.kind)
             self._unflushed -= chunk
         return Pointer(seg.segment_id, len(seg.entries) - 1)
 
     def flush(self) -> None:
         if self._unflushed:
-            self.device.sequential_write(self._unflushed, self.device.chunk_bytes, kind="log")
+            self.device.sequential_write(self._unflushed, self.device.chunk_bytes, kind=self.kind)
             self._unflushed = 0
 
     # -- read / invalidate ----------------------------------------------------

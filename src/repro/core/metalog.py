@@ -1,0 +1,112 @@
+"""Persistent shard-metadata WAL with crash-point fault injection.
+
+PR 2 modeled the range-sharded boundary map as "a tiny WAL'd metadata record"
+— an in-memory atomic flip that was asserted, never exercised.  This module
+makes it real: every boundary change, shard create/retire, and migration
+checkpoint is a :class:`MetadataLog` record, appended through the same
+redo-record idiom the store uses (``Log`` append + flush, charged to the
+device) and replayed by ``RangeShardedStore.recover()`` to rebuild the
+topology — including an in-flight incremental migration, which resumes from
+its last durable checkpoint instead of relying on a modeled atomic flip.
+
+Durability model: metadata records are *synchronous* — each ``append`` flushes
+before returning (a group commit per record, like the store's redo record),
+so a crash never loses an acknowledged record.  The interesting crash windows
+are therefore exactly the record *sites*: the instants just before each record
+becomes durable, where the protocol has done some data-path work (copies,
+flushes, tombstones) that the next record would cover.  The
+:meth:`crash_after` hook enumerates them for the fault-injection harness
+(``tests/test_crashpoints.py``): with ``crash_after(n)`` armed, the append
+that would write record ``n`` (0-based: the ``n+1``-th overall) raises
+:class:`CrashPoint` instead — exactly ``n`` records are durable, and the
+caller's in-memory state is whatever the protocol had built up to that
+un-acknowledged append (the protocol is record-then-apply, so replay of the
+``n`` durable records reconstructs a consistent topology).
+
+Record payload bytes are charged to the device with ``kind="meta"`` so the
+metadata WAL shows up in amplification stats (``DeviceStats.meta_written``).
+"""
+from __future__ import annotations
+
+from .io import Device
+from .logs import Log, LogEntry
+from .lsm import CAT_SMALL
+
+
+class CrashPoint(RuntimeError):
+    """Injected crash at a metadata-WAL record site (see ``crash_after``)."""
+
+    def __init__(self, site: int):
+        super().__init__(f"injected crash at metadata-WAL record site {site}")
+        self.site = site
+
+
+def _encode(record: dict) -> bytes:
+    """Deterministic record serialization (modeled: size is what matters)."""
+    return repr(sorted(record.items())).encode()
+
+
+class MetadataLog:
+    """Append-only, synchronously-committed log of shard-metadata records.
+
+    Records are plain dicts with a ``"kind"`` field; the log keeps them in
+    append order for replay and charges their encoded size to the device
+    (``kind="meta"``).  There is no truncation/compaction — the record stream
+    in these workloads is tiny, and keeping every record means ``replay()``
+    always reconstructs from genesis (the ``init`` record).
+    """
+
+    def __init__(self, device: Device):
+        self.device = device
+        self._log = Log(device, "meta", kind="meta")
+        self.records: list[dict] = []
+        self._crash_after: int | None = None
+
+    @property
+    def n_records(self) -> int:
+        return len(self.records)
+
+    @property
+    def bytes_appended(self) -> int:
+        return self._log.appended_bytes
+
+    # ---------------------------------------------------------------- append
+    def append(self, record: dict) -> int:
+        """Durably append one record; returns its index.
+
+        Raises :class:`CrashPoint` instead of appending when an injected
+        crash is armed at this site (``crash_after``) — the record is *not*
+        written, modeling a power cut between the protocol action and its
+        metadata commit.
+        """
+        if self._crash_after is not None and len(self.records) >= self._crash_after:
+            raise CrashPoint(len(self.records))
+        payload = _encode(record)
+        self._log.append(LogEntry(len(self.records) + 1, b"", payload, CAT_SMALL))
+        self._log.flush()  # synchronous commit: an acked record is never lost
+        self.records.append(dict(record))
+        return len(self.records) - 1
+
+    def replay(self) -> list[dict]:
+        """The durable record stream, oldest first (for recovery replay)."""
+        return list(self.records)
+
+    # -------------------------------------------------------- fault injection
+    def crash_after(self, n_records: int) -> None:
+        """Arm an injected crash: the append of record ``n_records`` raises.
+
+        ``n_records`` counts *all* records since genesis, so a harness that
+        wants to crash at the ``k``-th site of a scenario arms
+        ``crash_after(log.n_records + k)`` before driving it.  Appends below
+        the armed site proceed normally; the log stays readable (recovery
+        replays the durable prefix).  Disarm with :meth:`disarm`.
+        """
+        if n_records < 0:
+            raise ValueError(f"crash site must be >= 0, got {n_records}")
+        self._crash_after = n_records
+
+    def disarm(self) -> None:
+        self._crash_after = None
+
+
+__all__ = ["CrashPoint", "MetadataLog"]

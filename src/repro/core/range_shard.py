@@ -1,4 +1,4 @@
-"""Range-partitioned sharding with skew-driven splits/merges.
+"""Range-partitioned sharding with incremental, WAL-backed rebalancing.
 
 :class:`RangeShardedStore` partitions the keyspace into contiguous ranges —
 shard ``i`` owns ``[boundaries[i], boundaries[i+1])`` with ``boundaries[0] ==
@@ -9,32 +9,45 @@ is already globally ordered — no k-way merge), which is what makes range
 partitioning win scan workloads (YCSB E) where the hash-partitioned
 :class:`~repro.core.shard.ShardedStore` must fan out to all N shards.
 
-When to pick which front-end:
+Two things changed from the PR 2 design (stop-the-world migration over an
+in-memory atomic boundary map):
 
-* **hash** (``ShardedStore``) — point-op dominated workloads; crc32 routing is
-  perfectly uniform so no shard ever runs hot, but scans pay N-way fan-out.
-* **range** (this class) — scan-heavy or locality-sensitive workloads; scans
-  are range-local, but a zipfian hot-spot concentrates load on one shard, so
-  the shard map must adapt.
+**Incremental migration.**  ``split()``/``merge()`` no longer copy their whole
+range in one stall.  They install a :class:`MigrationState` and return; each
+:meth:`migration_tick` (driven from batch boundaries — ``ycsb.execute``'s
+batched ops land in ``_after_batch``) moves at most ``migration_batch_keys``
+keys.  The boundary flips **at migration start**, with double-routing during
+the transition:
 
-The adaptation is skew-driven rebalancing: per-shard op counters (the shards'
-own :class:`~repro.core.store.StoreStats`) are windowed by
-:meth:`rebalance_tick`; a shard carrying more than ``split_factor`` times the
-average window load splits at its median key, and the coldest adjacent pair
-whose combined load falls under ``merge_factor`` times the average merges.
-``ycsb.execute``'s batch mode ticks the policy after every batch.
+* *writes* for the moved range go to the new owner immediately;
+* *reads* probe the new owner first; only a true miss on a key in the
+  **pending** region ``[cursor, hi)`` (not yet copied) falls back to the
+  draining old shard (one extra probe, counted in ``get_probes``); keys below
+  the cursor are the new owner's alone — its answer (including a tombstone)
+  is authoritative, so stale copies in the old shard can never resurface;
+* *scans* overlapping the pending region consult both sides and keep the old
+  shard's row only when the new owner has no entry (live or tombstone) for
+  that key.
 
-Key migration rides the normal durability path (the same ordering discipline
-as GC relocation-before-reclaim, PR 1): a split **copies** the moved range
-into the new shard via ``scan_range`` + puts, **flushes the new shard's
-logs**, then atomically adopts the boundary, and only then tombstones the
-moved range out of the old shard via ``delete_range``.  A crash at any point
-is safe: before the boundary flips, the old shard is still authoritative and
-fully intact; after it flips, the new shard is durable, and any stale copies
-the crash leaves in the old shard are unreachable — routing directs their
-keys elsewhere and per-shard scans are clipped to the shard's owned range.
-Boundary updates themselves model a tiny WAL'd metadata record and survive
-``crash()``.
+Each tick preserves the flush-before-flip ordering *per batch*: copy the
+batch into the new owner → flush the new owner's logs → write the migration
+checkpoint record (this is the moment the batch's keys flip) → tombstone the
+batch out of the old shard.  A copy never clobbers a newer write: any entry
+the destination already holds with an LSN above the migration's start epoch
+was written during the migration (an application write routed to the new
+owner, or an earlier copy of the same key) and wins.
+
+**Persistent shard-metadata WAL.**  Every boundary change, shard
+create/retire and migration checkpoint is a durable
+:class:`~repro.core.metalog.MetadataLog` record (``init`` / ``split_start`` /
+``merge_start`` / ``checkpoint`` / ``finish``), written record-then-apply.
+``recover()`` replays the record stream from genesis to rebuild the boundary
+map, the live shard set and any in-flight :class:`MigrationState`, which then
+resumes (rolls forward) on subsequent ticks — a crash at *any* record site
+leaves a recoverable topology, which ``tests/test_crashpoints.py`` proves by
+enumerating every site via ``MetadataLog.crash_after``.  Metadata bytes are
+charged to a dedicated device with ``kind="meta"`` and folded into
+``device_stats()``/``amplification()``.
 
 Migration traffic is charged to the device like any other put/delete, but it
 is *internal* work: like GC relocations, it does not count toward application
@@ -43,9 +56,12 @@ op/byte stats.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 
+from .io import Device, DeviceStats
+from .metalog import MetadataLog
 from .shard import BaseShardedStore
-from .store import StoreConfig
+from .store import ParallaxStore, StoreConfig
 
 
 def _uniform_boundaries(num_shards: int) -> list[bytes]:
@@ -57,8 +73,39 @@ def _uniform_boundaries(num_shards: int) -> list[bytes]:
     return out
 
 
+def _next_key(key: bytes) -> bytes:
+    """The smallest key strictly greater than ``key`` (cursor advance)."""
+    return key + b"\x00"
+
+
+@dataclasses.dataclass
+class MigrationState:
+    """One in-flight range migration: ``[lo, hi)`` moving src -> dst.
+
+    ``cursor`` splits the range: ``[lo, cursor)`` is *migrated* (dst is sole
+    owner), ``[cursor, hi)`` is *pending* (dst owns writes, reads fall back
+    to src on a miss).  ``epoch_lsn`` is dst's LSN when the migration began:
+    any dst entry above it postdates the flip and must not be overwritten by
+    a (re-)copy.
+    """
+
+    kind: str            # 'split' | 'merge'
+    src_id: int
+    dst_id: int
+    lo: bytes
+    hi: bytes | None     # None = unbounded (last shard)
+    cursor: bytes
+    epoch_lsn: int
+
+    def covers(self, key: bytes) -> bool:
+        return key >= self.lo and (self.hi is None or key < self.hi)
+
+    def pending(self, key: bytes) -> bool:
+        return key >= self.cursor and (self.hi is None or key < self.hi)
+
+
 class RangeShardedStore(BaseShardedStore):
-    """Contiguous key ranges over N ParallaxStores, rebalanced on skew."""
+    """Contiguous key ranges over N ParallaxStores, rebalanced incrementally."""
 
     def __init__(
         self,
@@ -72,6 +119,7 @@ class RangeShardedStore(BaseShardedStore):
         min_split_keys: int = 32,
         max_shards: int = 64,
         auto_rebalance: bool = True,
+        migration_batch_keys: int = 128,
     ):
         if boundaries is not None:
             if not boundaries or boundaries[0] != b"":
@@ -87,9 +135,29 @@ class RangeShardedStore(BaseShardedStore):
         self.min_split_keys = min_split_keys
         self.max_shards = max_shards
         self.auto_rebalance = auto_rebalance
+        self.migration_batch_keys = migration_batch_keys
         self.splits = 0
         self.merges = 0
         self.migrated_keys = 0
+        self.migration_ticks = 0
+        self.get_fallbacks = 0  # pending-region reads served by the old shard
+        # shard identity: the WAL names shards by id, not list position; the
+        # registry holds every live store including a merge's draining source
+        self._shard_ids = list(range(len(self.shards)))
+        self._next_shard_id = len(self.shards)
+        self._by_id: dict[int, ParallaxStore] = dict(zip(self._shard_ids, self.shards))
+        self._migration: MigrationState | None = None
+        # the shard-metadata WAL lives on its own (cache-less) device so its
+        # bytes are attributable; device_stats() folds it into the aggregate
+        self.meta_device = Device(
+            cache_bytes=0,
+            segment_bytes=self.config.segment_bytes,
+            chunk_bytes=self.config.chunk_bytes,
+        )
+        self.metalog = MetadataLog(self.meta_device)
+        self.metalog.append(
+            {"kind": "init", "boundaries": list(self.boundaries), "shards": list(self._shard_ids)}
+        )
         self._window_base = self._op_counts()
 
     @classmethod
@@ -112,6 +180,40 @@ class RangeShardedStore(BaseShardedStore):
         hi = self.boundaries[i + 1] if i + 1 < len(self.boundaries) else None
         return self.boundaries[i], hi
 
+    @property
+    def migration(self) -> MigrationState | None:
+        return self._migration
+
+    def _all_stores(self) -> list[ParallaxStore]:
+        return list(self._by_id.values())
+
+    def _register(self, store: ParallaxStore) -> int:
+        sid = self._next_shard_id
+        self._next_shard_id += 1
+        self._by_id[sid] = store
+        return sid
+
+    # ------------------------------------------------------------- point read
+    def _get_from(self, sid: int, key: bytes) -> bytes | None:
+        """Double-routing read for a key in the pending region: the new owner
+        answers authoritatively — even with a tombstone — iff its newest entry
+        postdates the migration epoch (it was written after the ownership
+        flip).  Anything older is pre-flip residue (a merge destination keeps
+        stale tombstones from an earlier split's ranged delete in the absorbed
+        range, and possibly stale live copies from a crashed one) and must
+        defer to the draining old shard, costing one extra front-end probe.
+        """
+        m = self._migration
+        if m is not None and m.pending(key):
+            dst = self._by_id[m.dst_id]
+            entry = dst.index_entry(key)  # pure index walk, free
+            if entry is not None and entry.lsn > m.epoch_lsn:
+                return dst.get(key)
+            self.get_probes += 1
+            self.get_fallbacks += 1
+            return self._by_id[m.src_id].get(key)
+        return self.shards[sid].get(key)
+
     # ------------------------------------------------------------------- scan
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Range-local scan: only shards overlapping ``[start, ...)`` are probed.
@@ -119,7 +221,10 @@ class RangeShardedStore(BaseShardedStore):
         Ranges are ordered and each shard's result is sorted, so concatenation
         is the global sorted order — no merge.  Results are clipped to each
         shard's owned range so stale copies left behind by a crashed migration
-        (always at or past the shard's upper bound) can never surface.
+        (always at or past the shard's upper bound) can never surface.  While
+        a migration is in flight, the migrating shard's rows are the merge of
+        the new owner with the old shard's pending remainder (old rows only
+        where the new owner holds no entry), costing one extra scan probe.
         """
         self.scans += 1
         out: list[tuple[bytes, bytes]] = []
@@ -127,19 +232,77 @@ class RangeShardedStore(BaseShardedStore):
         while i < len(self.shards) and len(out) < count:
             self.scan_probes += 1
             lo, hi = self.bounds(i)
-            for key, value in self.shards[i].scan(max(start, lo), count - len(out)):
+            for key, value in self._shard_rows(i, max(start, lo), count - len(out)):
                 if hi is not None and key >= hi:
                     break
                 out.append((key, value))
+                if len(out) >= count:
+                    break
             i += 1
         self._after_batch()  # scans feed the skew window like batched ops
         return out
 
+    def _shard_rows(self, i: int, start: bytes, need: int) -> list[tuple[bytes, bytes]]:
+        """Up to ``need`` sorted live rows of shard ``i`` from ``start``,
+        merged with the draining source's pending remainder when shard ``i``
+        is the destination of an in-flight migration.
+
+        The merged view is resolved per key from index walks on both sides
+        (free, like ``live_keys_in``), and only the rows actually returned
+        pay a value read — the device cost of the extra probe the front-end
+        counters report.  Resolution rule (the scan form of ``_get_from``):
+        inside the pending window the owner's entry counts only when it
+        postdates the flip — a post-flip tombstone keeps suppressing the
+        stale source copy — while pre-flip residue (stale copies/tombstones
+        from an earlier crashed split) defers to the draining source.
+        Truncation is safe because both walks cover the *whole* window, so
+        the first ``need`` resolved keys are the true merged prefix.
+        """
+        shard = self.shards[i]
+        m = self._migration
+        if m is None or self._shard_ids[i] != m.dst_id:
+            return shard.scan(start, need)
+        pend_lo = max(start, m.cursor)
+        if m.hi is not None and pend_lo >= m.hi:
+            return shard.scan(start, need)  # scan window is past the pending region
+        shard.stats.scans += 1  # the owner serves the scan (skew signal)
+        out: list[tuple[bytes, bytes]] = []
+        if start < m.cursor:
+            # the already-migrated prefix is the owner's alone; if it fills
+            # the request the draining source is never consulted (or counted)
+            own = shard.newest_entries(start, m.cursor)
+            for k in sorted(own):
+                e = own[k]
+                if e.tombstone:
+                    continue
+                out.append((k, shard._value_of(e)))
+                if len(out) >= need:
+                    return out
+        self.scan_probes += 1
+        src = self._by_id[m.src_id]
+        # key -> (answering store, its newest entry)
+        resolved = {k: (src, e) for k, e in src.newest_entries(pend_lo, m.hi).items()}
+        for k, e in shard.newest_entries(pend_lo, m.hi).items():
+            if e.lsn <= m.epoch_lsn:
+                continue  # pre-flip residue in the pending window
+            resolved[k] = (shard, e)
+        for k in sorted(resolved):
+            owner, e = resolved[k]
+            if e.tombstone:
+                continue
+            out.append((k, owner._value_of(e)))
+            if len(out) >= need:
+                break
+        return out
+
     # ------------------------------------------------------------ batched ops
     # batch boundaries (BaseShardedStore's batched ops and gc_tick — which is
-    # where ycsb.execute lands) are the points where the skew policy runs
+    # where ycsb.execute lands) are where migrations advance and, when no
+    # migration is in flight, where the skew policy runs
     def _after_batch(self) -> None:
-        if self.auto_rebalance:
+        if self._migration is not None:
+            self.migration_tick()
+        elif self.auto_rebalance:
             self.rebalance_tick()
 
     # ------------------------------------------------------------ rebalancing
@@ -152,13 +315,17 @@ class RangeShardedStore(BaseShardedStore):
     def rebalance_tick(self, force: bool = False) -> int:
         """Evaluate the skew policy over the current op window.
 
-        Returns the number of topology changes applied (0, 1 split, 1 merge,
-        or both).  The window is the per-shard op-count delta since the last
-        evaluation; nothing happens until ``rebalance_window`` ops accumulate
-        (unless ``force``).  At most one split (the hottest qualifying shard)
-        and one merge (the coldest qualifying adjacent pair) per tick keeps
-        migrations incremental.
+        Returns the number of topology changes *started* (0 or 1).  While a
+        migration is in flight the policy is paused — the tick advances the
+        migration instead, so at most one range is ever moving.  The window
+        is the per-shard op-count delta since the last evaluation; nothing
+        happens until ``rebalance_window`` ops accumulate (unless ``force``).
+        A split of the hottest qualifying shard is preferred over a merge of
+        the coldest qualifying adjacent pair.
         """
+        if self._migration is not None:
+            self.migration_tick()
+            return 0
         counts = self._op_counts()
         if len(counts) != len(self._window_base):
             # topology changed out-of-band (manual split/merge): restart window
@@ -170,7 +337,6 @@ class RangeShardedStore(BaseShardedStore):
             return 0
         avg = total / len(self.shards)
 
-        # decide both actions from this window's deltas before mutating
         split_idx = None
         if len(self.shards) < self.max_shards:
             hot = max(range(len(deltas)), key=deltas.__getitem__)
@@ -184,26 +350,29 @@ class RangeShardedStore(BaseShardedStore):
             cold = min(range(len(self.shards) - 1), key=lambda i: deltas[i] + deltas[i + 1])
             if deltas[cold] + deltas[cold + 1] < self.merge_factor * avg:
                 merge_idx = cold
-        if merge_idx is not None and split_idx is not None and merge_idx in (split_idx - 1, split_idx):
-            merge_idx = None  # never merge a shard we are about to split
 
         changed = 0
-        if split_idx is not None and self.split(split_idx):
-            changed += 1
-            if merge_idx is not None and merge_idx > split_idx:
-                merge_idx += 1  # the split inserted a shard before the pair
-        if merge_idx is not None:
-            self.merge(merge_idx)
-            changed += 1
+        if split_idx is not None and self.split(split_idx, background=True):
+            changed = 1
+        elif merge_idx is not None:
+            self.merge(merge_idx, background=True)
+            changed = 1
         self._window_base = self._op_counts()
         return changed
 
-    def split(self, i: int, at: bytes | None = None) -> bool:
+    # -------------------------------------------------------------- migration
+    def split(self, i: int, at: bytes | None = None, *, background: bool = False) -> bool:
         """Split shard ``i`` at ``at`` (default: its median live key).
 
-        Ordering discipline (crash-safe at every step, see module docstring):
-        copy -> flush new shard -> adopt boundary -> tombstone old range.
+        Creates the new shard, durably records ``split_start`` and flips the
+        boundary — from that instant writes in ``[at, hi)`` route to the new
+        owner and reads double-route.  With ``background=True`` the key copy
+        then proceeds one :meth:`migration_tick` batch at a time; otherwise
+        the migration is drained before returning (the PR 2 stop-the-world
+        behavior, as a special case).  Only one migration runs at a time: a
+        still-active one is drained first.
         """
+        self.drain_migration()
         src = self.shards[i]
         lo, hi = self.bounds(i)
         if at is None:
@@ -213,65 +382,243 @@ class RangeShardedStore(BaseShardedStore):
             at = keys[len(keys) // 2]
         if at <= lo or (hi is not None and at >= hi):
             return False
-        # 1. copy the moved range through the normal read path; writes into
-        #    the new shard are internal (not application traffic), like GC
-        #    relocations
         dst = self._new_shard()
-        rows = src.scan_range(at, hi, internal=True)
-        for key, value in rows:
-            dst._write(key, value, tombstone=False, internal=True)
-        # 2. durability barrier: the moved data must be durable before the
-        #    boundary flips (same ordering as GC relocations before segment
-        #    reclaim — PR 1)
-        dst.flush_all()
-        # 3. atomically adopt the new topology (a tiny WAL'd metadata record)
+        dst_id = self._register(dst)
+        src_id = self._shard_ids[i]
+        # record-then-apply: if the record never lands (crash), the orphan
+        # destination is dropped by recovery replay and the split never was
+        self.metalog.append(
+            {"kind": "split_start", "src": src_id, "dst": dst_id,
+             "at": at, "hi": hi, "epoch": dst.lsn}
+        )
         self.shards.insert(i + 1, dst)
+        self._shard_ids.insert(i + 1, dst_id)
         self.boundaries.insert(i + 1, at)
-        # 4. only now does the old shard drop the moved range (tombstones for
-        #    exactly the rows copied in step 1, through the normal write
-        #    path); a crash that loses some of these tombstones leaves stale
-        #    copies at/past the shard's new upper bound — unreachable via
-        #    routing/clipped scans
-        src.delete_range(at, hi, internal=True, keys=[k for k, _ in rows])
+        dst.pin_tombstones = True  # fence: see _finish_migration
+        self._migration = MigrationState("split", src_id, dst_id, at, hi, at, dst.lsn)
         self.splits += 1
-        self.migrated_keys += len(rows)
         self._window_base = self._op_counts()
+        if not background:
+            self.drain_migration()
         return True
 
-    def merge(self, i: int) -> None:
+    def merge(self, i: int, *, background: bool = False) -> None:
         """Merge shard ``i+1`` into shard ``i`` (cold-neighbor compaction).
 
-        Same ordering as :meth:`split`: copy into the surviving shard, flush
-        it, then drop the boundary; the absorbed shard is discarded wholesale
-        (no ranged delete needed — its device disappears with it).
+        Durably records ``merge_start`` and drops the boundary — the
+        surviving shard owns the combined range immediately, the absorbed
+        shard leaves the routed map but keeps draining through double-routed
+        reads until its keys are migrated, then retires (stats folded).
         """
+        self.drain_migration()
         left, right = self.shards[i], self.shards[i + 1]
         lo, hi = self.bounds(i + 1)
-        # clear any stale copies a crashed earlier split left in the surviving
-        # shard beyond its boundary: extending its range would make them
-        # reachable again, resurrecting keys deleted in the absorbed shard
-        left.delete_range(lo, hi, internal=True)
-        rows = right.scan_range(lo, hi, internal=True)
-        for key, value in rows:
-            left._write(key, value, tombstone=False, internal=True)
-        left.flush_all()
-        self._retire_shard_stats(right)
+        # NOTE: the surviving shard may hold stale pre-flip entries in the
+        # absorbed range (copies/tombstones a crashed earlier split left
+        # behind).  They are *not* cleaned here — a one-shot clean would have
+        # its own crash window — but swept per batch by migration_tick's
+        # residue pass, and masked until then: reads and scans ignore
+        # destination entries at or below the migration epoch.
+        left_id, right_id = self._shard_ids[i], self._shard_ids[i + 1]
+        self.metalog.append(
+            {"kind": "merge_start", "src": right_id, "dst": left_id,
+             "lo": lo, "hi": hi, "epoch": left.lsn}
+        )
         del self.shards[i + 1]
+        del self._shard_ids[i + 1]
         del self.boundaries[i + 1]
+        left.pin_tombstones = True  # fence: see _finish_migration
+        self._migration = MigrationState("merge", right_id, left_id, lo, hi, lo, left.lsn)
         self.merges += 1
-        self.migrated_keys += len(rows)
+        self._window_base = self._op_counts()
+        if not background:
+            self.drain_migration()
+
+    def migration_tick(self, max_keys: int | None = None) -> int:
+        """Advance the in-flight migration by one batch; returns keys copied.
+
+        Per-batch ordering (the PR 1/PR 2 discipline at batch granularity):
+        copy the batch into the destination → **flush the destination** →
+        durably checkpoint the cursor (this record flips ownership of the
+        batch) → tombstone the batch out of the source.  A crash anywhere
+        re-runs the batch from the last durable cursor; re-copies are
+        idempotent because any destination entry newer than the migration
+        epoch (an application write since the flip, or the earlier copy
+        itself) is left untouched.
+        """
+        m = self._migration
+        if m is None:
+            return 0
+        self.migration_ticks += 1
+        budget = max(1, self.migration_batch_keys if max_keys is None else max_keys)
+        src, dst = self._by_id[m.src_id], self._by_id[m.dst_id]
+        keys = src.live_keys_in(m.cursor, m.hi)
+        batch = keys[:budget]
+        last_batch = len(keys) <= budget
+        batch_hi = m.hi if last_batch else _next_key(batch[-1])
+        # residue sweep: stale pre-flip entries in this tick's window (what a
+        # crashed earlier split left in a merge destination) with no
+        # authoritative replacement get a post-flip tombstone — the batch's
+        # own copies shadow the rest.  Split destinations are fresh (epoch 0),
+        # so this never fires for them.
+        batch_set = set(batch)
+        for key, e in dst.newest_entries(m.cursor, batch_hi).items():
+            if e.lsn <= m.epoch_lsn and not e.tombstone and key not in batch_set:
+                dst._write(key, b"", tombstone=True, internal=True)
+        moved = 0
+        if batch:
+            for key, value in src.scan_range(batch[0], batch_hi, internal=True):
+                cur = dst.index_entry(key)
+                if cur is not None and cur.lsn > m.epoch_lsn:
+                    continue  # written since the flip (app write or earlier copy)
+                dst._write(key, value, tombstone=False, internal=True)
+                moved += 1
+        # durability barrier: the batch (and the residue tombstones) must be
+        # durable in the new owner before the record that flips ownership
+        dst.flush_all()
+        if batch:
+            new_cursor = batch_hi if batch_hi is not None else _next_key(batch[-1])
+            self.metalog.append({"kind": "checkpoint", "cursor": new_cursor})
+            m.cursor = new_cursor
+            # only now does the source drop the batch (tombstones through the
+            # normal write path); losing them in a crash leaves stale copies
+            # below the cursor — unreachable: reads and scans stop consulting
+            # the source once a key's ownership has flipped
+            src.delete_range(batch[0], batch_hi, internal=True, keys=batch)
+            self.migrated_keys += len(batch)
+        if last_batch:
+            self.metalog.append({"kind": "finish"})
+            self._finish_migration()
+        return moved
+
+    def drain_migration(self, max_ticks: int = 1_000_000) -> int:
+        """Run migration ticks until none is in flight; returns ticks used."""
+        n = 0
+        while self._migration is not None and n < max_ticks:
+            self.migration_tick()
+            n += 1
+        return n
+
+    def _finish_migration(self) -> None:
+        m = self._migration
+        if m is not None:
+            # lift the tombstone fence: while the migration was in flight,
+            # the destination's tombstones were the only evidence that a key
+            # was deleted after the flip — compaction must not drop them at
+            # the last level or the copy-skip rule / read fallback would
+            # resurrect the source's stale copy.  With the source drained
+            # (and, for merges, retired) they may be collected again.
+            self._by_id[m.dst_id].pin_tombstones = False
+            if m.kind == "merge":
+                self._retire_by_id(m.src_id)
+        self._migration = None
+        self._window_base = self._op_counts()
+
+    def _retire_by_id(self, sid: int) -> None:
+        """Drop a drained store from the registry, folding its history.
+
+        Idempotent (recovery replay may retire a shard the live path already
+        retired — or vice versa); folding happens exactly once, at the drop.
+        """
+        store = self._by_id.pop(sid, None)
+        if store is not None:
+            self._retire_shard_stats(store)
+
+    # --------------------------------------------------------------- recovery
+    def recover(self) -> None:
+        """Rebuild topology + in-flight migration from the metadata WAL, then
+        recover every live store.
+
+        The WAL — not the possibly-mid-mutation in-memory maps — is the source
+        of truth: replay reconstructs ``boundaries``/``shards`` from the
+        ``init`` record forward, restores the :class:`MigrationState` of an
+        unfinished migration at its last durable checkpoint (it resumes on
+        subsequent ticks), and drops orphan stores whose start record never
+        landed.  Shard *objects* are looked up by id in the registry: their
+        contents are the (simulated) device's contents, which survive the
+        crash just like a single ``ParallaxStore``'s do.
+        """
+        self._replay_metalog()
+        for s in self._all_stores():
+            s.recover()
+
+    def _replay_metalog(self) -> None:
+        boundaries: list[bytes] = []
+        ids: list[int] = []
+        migration: MigrationState | None = None
+        for rec in self.metalog.replay():
+            kind = rec["kind"]
+            if kind == "init":
+                boundaries = list(rec["boundaries"])
+                ids = list(rec["shards"])
+            elif kind == "split_start":
+                pos = ids.index(rec["src"])
+                boundaries.insert(pos + 1, rec["at"])
+                ids.insert(pos + 1, rec["dst"])
+                migration = MigrationState(
+                    "split", rec["src"], rec["dst"], rec["at"], rec["hi"], rec["at"], rec["epoch"]
+                )
+            elif kind == "merge_start":
+                pos = ids.index(rec["src"])
+                del boundaries[pos]
+                del ids[pos]
+                migration = MigrationState(
+                    "merge", rec["src"], rec["dst"], rec["lo"], rec["hi"], rec["lo"], rec["epoch"]
+                )
+            elif kind == "checkpoint":
+                migration.cursor = rec["cursor"]
+            elif kind == "finish":
+                if migration is not None and migration.kind == "merge":
+                    self._retire_by_id(migration.src_id)
+                migration = None
+        live = set(ids)
+        if migration is not None:
+            live.update((migration.src_id, migration.dst_id))
+        for sid in [s for s in self._by_id if s not in live]:
+            # a destination created just before its start record was lost:
+            # empty by construction (data only moves after the record), drop
+            del self._by_id[sid]
+        self.boundaries = boundaries
+        self._shard_ids = ids
+        self.shards = [self._by_id[sid] for sid in ids]
+        self._migration = migration
+        # rebuild the tombstone fence from the WAL (it is derived state): only
+        # the destination of the in-flight migration, if any, is pinned
+        for sid, store in self._by_id.items():
+            store.pin_tombstones = migration is not None and sid == migration.dst_id
+        self._next_shard_id = max(self._next_shard_id, max(live, default=0) + 1)
         self._window_base = self._op_counts()
 
     # ------------------------------------------------------------------ stats
+    def device_stats(self) -> DeviceStats:
+        total = super().device_stats()
+        for f in dataclasses.fields(DeviceStats):
+            setattr(total, f.name, getattr(total, f.name) + getattr(self.meta_device.stats, f.name))
+        return total
+
+    def space_bytes(self) -> int:
+        return super().space_bytes() + self.metalog.bytes_appended
+
+    def device_time(self) -> float:
+        """Parallel shard devices, plus the metadata WAL's serial commits —
+        synchronous records block the protocol, they don't overlap shards."""
+        return super().device_time() + self.meta_device.device_time()
+
     def checkpoint_stats(self) -> dict:
         out = super().checkpoint_stats()
+        m = self._migration
         out.update(
             boundaries=list(self.boundaries),
             splits=self.splits,
             merges=self.merges,
             migrated_keys=self.migrated_keys,
+            migration_ticks=self.migration_ticks,
+            get_fallbacks=self.get_fallbacks,
+            migration=None if m is None else dataclasses.asdict(m),
+            meta_records=self.metalog.n_records,
+            meta_bytes=self.metalog.bytes_appended,
         )
         return out
 
 
-__all__ = ["RangeShardedStore"]
+__all__ = ["MigrationState", "RangeShardedStore"]

@@ -75,6 +75,12 @@ class BaseShardedStore:
         # avoids); survives topology changes, unlike per-shard counters
         self.scans = 0
         self.scan_probes = 0
+        # front-end point-read accounting, same rationale: one probe per shard
+        # consulted.  Normally get_probes == gets; during an incremental
+        # migration a read that misses the new owner and falls back to the
+        # draining old shard costs one extra probe (range front-end only).
+        self.gets = 0
+        self.get_probes = 0
         # stats of shards retired by topology changes (range-shard merges):
         # folded in here so aggregates never lose traffic history
         self.retired_stats = StoreStats()
@@ -86,6 +92,13 @@ class BaseShardedStore:
     @property
     def num_shards(self) -> int:
         return len(self.shards)
+
+    def _all_stores(self) -> list[ParallaxStore]:
+        """Every live backing store — the routed shards plus any store still
+        draining out of the topology (a range-shard merge retires its source
+        only once the migration finishes).  Maintenance, crash/recover and
+        stat aggregation iterate this, not ``self.shards``."""
+        return list(self.shards)
 
     # ---------------------------------------------------------------- routing
     def shard_of(self, key: bytes) -> int:
@@ -111,8 +124,16 @@ class BaseShardedStore:
     def delete(self, key: bytes) -> None:
         self.shard_for(key).delete(key)
 
+    def _get_from(self, sid: int, key: bytes) -> bytes | None:
+        """Point-read routed to shard ``sid``; adaptive front-ends override
+        this for migration-aware double-routing (and bump ``get_probes`` for
+        any extra store they consult)."""
+        return self.shards[sid].get(key)
+
     def get(self, key: bytes) -> bytes | None:
-        return self.shard_for(key).get(key)
+        self.gets += 1
+        self.get_probes += 1
+        return self._get_from(self.shard_of(key), key)
 
     # ------------------------------------------------------------ batched ops
     def _after_batch(self) -> None:
@@ -145,9 +166,10 @@ class BaseShardedStore:
     def get_many(self, keys: Sequence[bytes]) -> list[bytes | None]:
         out: list[bytes | None] = [None] * len(keys)
         for sid, positions in self._group(keys).items():
-            shard = self.shards[sid]
             for pos in positions:
-                out[pos] = shard.get(keys[pos])
+                self.gets += 1
+                self.get_probes += 1
+                out[pos] = self._get_from(sid, keys[pos])
         self._after_batch()
         return out
 
@@ -157,38 +179,38 @@ class BaseShardedStore:
 
     # ------------------------------------------------------------ maintenance
     def gc_tick(self, force: bool = False) -> int:
-        n = sum(s.gc_tick(force=force) for s in self.shards)
+        n = sum(s.gc_tick(force=force) for s in self._all_stores())
         self._after_batch()
         return n
 
     def flush_all(self) -> None:
-        for s in self.shards:
+        for s in self._all_stores():
             s.flush_all()
 
     def crash(self) -> list[int]:
-        """Crash every shard; returns the per-shard recovery cutoff LSNs.
+        """Crash every live store; returns the per-store recovery cutoff LSNs.
 
-        Shard LSN counters are independent, so there is no single global
-        cutoff — each shard recovers to its own prefix (``shards[i]`` honors
-        the ``ParallaxStore.crash`` contract for cutoff ``[i]``).
+        Store LSN counters are independent, so there is no single global
+        cutoff — each store recovers to its own prefix (``_all_stores()[i]``
+        honors the ``ParallaxStore.crash`` contract for cutoff ``[i]``).
         """
-        return [s.crash() for s in self.shards]
+        return [s.crash() for s in self._all_stores()]
 
     def recover(self) -> None:
-        for s in self.shards:
+        for s in self._all_stores():
             s.recover()
 
     # ------------------------------------------------------------------ stats
     def aggregate_stats(self) -> StoreStats:
         total = dataclasses.replace(self.retired_stats)
-        for s in self.shards:
+        for s in self._all_stores():
             for f in dataclasses.fields(StoreStats):
                 setattr(total, f.name, getattr(total, f.name) + getattr(s.stats, f.name))
         return total
 
     def device_stats(self) -> DeviceStats:
         total = dataclasses.replace(self.retired_device)
-        for s in self.shards:
+        for s in self._all_stores():
             for f in dataclasses.fields(DeviceStats):
                 setattr(total, f.name, getattr(total, f.name) + getattr(s.device.stats, f.name))
         return total
@@ -208,10 +230,10 @@ class BaseShardedStore:
 
     def device_time(self) -> float:
         """Parallel-device completion time: the slowest shard bounds the batch."""
-        return max(s.device.device_time() for s in self.shards)
+        return max(s.device.device_time() for s in self._all_stores())
 
     def space_bytes(self) -> int:
-        return sum(s.space_bytes() for s in self.shards)
+        return sum(s.space_bytes() for s in self._all_stores())
 
     def checkpoint_stats(self) -> dict:
         return {

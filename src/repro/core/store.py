@@ -111,6 +111,14 @@ class ParallaxStore:
         self._durable: dict[str, int] = {"small": 0, "medium": 0, "large": 0}
         self._gc_region: dict[int, int] = {}            # seg offset -> dead bytes (info)
         self._in_gc = False                             # reentrancy guard
+        # tombstone fence: while True, last-level compactions keep tombstones
+        # instead of dropping them.  The range-sharded front-end pins the
+        # destination of an in-flight migration: its tombstones are the only
+        # evidence that a key was deleted after the ownership flip, and the
+        # double-routing read path / copy-skip rule must keep seeing them
+        # until the draining source is gone (like a sequence-number fence
+        # pinning tombstone GC under a snapshot in a real LSM).
+        self.pin_tombstones = False
 
     # ------------------------------------------------------------------ sizes
     def _classify(self, key: bytes, value: bytes) -> int:
@@ -242,7 +250,9 @@ class ParallaxStore:
         self.device.sequential_read(dst.index_bytes, self.device.segment_bytes, kind="compaction")
 
         is_last = dst_idx == len(self.levels) - 1
-        merged, dead = merge_runs(run, dst.entries, drop_tombstones=is_last)
+        merged, dead = merge_runs(
+            run, dst.entries, drop_tombstones=is_last and not self.pin_tombstones
+        )
         self.stats.entries_merged += len(merged)
         for d in dead:
             self._mark_superseded(d)
@@ -398,12 +408,13 @@ class ParallaxStore:
         return out
 
     # ---------------------------------------------------------- ranged delete
-    def live_keys_in(self, start: bytes, end: bytes | None) -> list[bytes]:
-        """Sorted live (non-tombstone, newest-LSN) keys in ``[start, end)``.
+    def newest_entries(self, start: bytes, end: bytes | None) -> dict[bytes, IndexEntry]:
+        """Newest entry per key in ``[start, end)``, tombstones included.
 
-        Pure index walk — no device traffic is charged; callers that read the
-        values pay through :meth:`scan_range`, callers that delete pay through
-        the normal write path.
+        Pure index walk — no device traffic is charged (same discipline as
+        :meth:`live_keys_in`, which is built on it).  The migration read path
+        uses the tombstone visibility to decide which keys the new owner
+        already answers for.
         """
         best: dict[bytes, IndexEntry] = {}
         sources: list[Iterable[IndexEntry]] = [
@@ -419,7 +430,33 @@ class ParallaxStore:
                 cur = best.get(e.key)
                 if cur is None or e.lsn > cur.lsn:
                     best[e.key] = e
-        return sorted(k for k, e in best.items() if not e.tombstone)
+        return best
+
+    def index_entry(self, key: bytes) -> IndexEntry | None:
+        """Newest entry for one key (tombstones included), pure index walk.
+
+        No device traffic or stat accounting — the migration copy path uses
+        it to skip keys the destination already holds a newer write for.
+        """
+        e = self.l0.get(key)
+        if e is not None:
+            return e
+        for lvl in self.levels:
+            found = lvl.find(key)
+            if found is not None:
+                return found
+        return None
+
+    def live_keys_in(self, start: bytes, end: bytes | None) -> list[bytes]:
+        """Sorted live (non-tombstone, newest-LSN) keys in ``[start, end)``.
+
+        Pure index walk — no device traffic is charged; callers that read the
+        values pay through :meth:`scan_range`, callers that delete pay through
+        the normal write path.
+        """
+        return sorted(
+            k for k, e in self.newest_entries(start, end).items() if not e.tombstone
+        )
 
     def delete_range(self, start: bytes, end: bytes | None, *, internal: bool = False,
                      keys: list[bytes] | None = None) -> int:

@@ -166,7 +166,8 @@ def _flush_batch(store, kind: str, batch: list[Op]) -> None:
             store.scan(op.key, op.scan_len)
 
 
-def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) -> dict:
+def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0,
+            migrate_budget: int = 0) -> dict:
     """Drive a store through an op stream; returns op counts.
 
     ``batch_size == 0`` (the default) issues one call per op — the original
@@ -176,9 +177,27 @@ def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) ->
     :class:`repro.core.shard.ShardedStore`) when present, falling back to
     per-op calls otherwise.  Batches never cross a kind boundary and apply in
     stream order, so visible state is identical to the sequential path.
+
+    ``migrate_budget > 0`` gives the driver explicit control of incremental
+    rebalancing: after every dispatched batch (every op in per-op mode), a
+    store exposing ``migration_tick``
+    (:class:`repro.core.range_shard.RangeShardedStore`)
+    advances its in-flight migration by at most that many keys — the tick
+    budget that amortizes shard migration against foreground batches.  Stores
+    without the hook ignore it.  (Such stores also self-tick one
+    ``migration_batch_keys`` batch at each batch boundary; the explicit
+    budget adds driver-paced ticks on top, e.g. to throttle or accelerate.)
     """
     counts = {"insert": 0, "update": 0, "read": 0, "scan": 0}
+    tickable = migrate_budget > 0 and hasattr(store, "migration_tick")
+
+    def _tick() -> None:
+        if tickable:
+            store.migration_tick(migrate_budget)
+
     if batch_size <= 0:
+        # per-op mode: every op is its own "batch", so the driver-paced tick
+        # fires after each one
         for n, op in enumerate(ops, 1):
             if op.kind == "insert":
                 store.put(op.key, payload(op.value_size))
@@ -189,6 +208,7 @@ def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) ->
             else:
                 store.scan(op.key, op.scan_len)
             counts[op.kind] += 1
+            _tick()
             if gc_every and n % gc_every == 0:
                 store.gc_tick()
         store.gc_tick()
@@ -200,6 +220,7 @@ def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) ->
     for op in ops:
         if kind is not None and (op.kind != kind or len(batch) >= batch_size):
             _flush_batch(store, kind, batch)
+            _tick()
             batch = []
         kind = op.kind
         batch.append(op)
@@ -207,9 +228,11 @@ def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0) ->
         n += 1
         if gc_every and n % gc_every == 0:
             _flush_batch(store, kind, batch)
+            _tick()
             batch, kind = [], None
             store.gc_tick()
     if kind is not None:
         _flush_batch(store, kind, batch)
+        _tick()
     store.gc_tick()
     return counts

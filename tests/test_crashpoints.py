@@ -1,0 +1,219 @@
+"""Crash-point fault-injection harness for the shard-metadata WAL.
+
+The incremental-migration protocol (PR 3) is interruptible at many points; the
+set of interesting crash windows is exactly the set of
+:class:`~repro.core.metalog.MetadataLog` record *sites* — the instants just
+before each metadata record becomes durable, where the protocol has done
+data-path work (copies, flushes, tombstones) the record would cover.  This
+harness enumerates them systematically:
+
+1. run each scenario (split / merge / migration with live traffic) once
+   cleanly and count the WAL records it appends;
+2. re-run it from scratch once per site with ``MetadataLog.crash_after``
+   armed, so the append at that site raises :class:`CrashPoint` instead of
+   committing — modeling a power cut with exactly that record prefix durable;
+3. crash + recover the store and assert the differential oracle's invariant
+   against a dict model: byte-identical gets, a globally sorted scan equal to
+   the model's key set (**no lost and no duplicated keys**), at every site;
+4. drain the (possibly resumed) migration and assert the invariant again —
+   an interrupted migration must roll forward to completion.
+
+The tier-1 run sweeps every scenario with up to ``TIER1_SITE_CAP`` sites
+each (the standard batch size yields ~7 sites per scenario, so the cap is
+rarely binding); the ``slow``-marked sweep re-runs the same scenarios at a
+finer migration batch size, which multiplies the checkpoint sites, and
+enumerates **every** one (run it with ``pytest -m slow``).
+"""
+import pytest
+
+from repro.core import RangeShardedStore, StoreConfig
+from repro.core.metalog import CrashPoint
+from repro.core.ycsb import make_key, payload
+
+N_KEYS = 180          # 2 shards * 90 keys; a split moves ~45
+BATCH_KEYS = 12       # -> 4 checkpoints per migration (>= 3 mid-migration ticks)
+FINE_BATCH_KEYS = 4   # slow sweep: ~12 checkpoints per migration
+TIER1_SITE_CAP = 7    # ~20 sites across the three scenarios in tier-1
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _value(i: int, round_: int = -1) -> bytes:
+    return (b"%06d/%03d:" % (i, round_)) + payload(104)
+
+
+def build(batch_keys: int) -> tuple[RangeShardedStore, dict[bytes, bytes]]:
+    keys = [make_key(i) for i in range(N_KEYS)]
+    st = RangeShardedStore.for_keys(
+        keys, 2, small_config(), auto_rebalance=False, migration_batch_keys=batch_keys,
+    )
+    model = {k: _value(i) for i, k in enumerate(keys)}
+    st.put_many(list(model.items()))
+    st.flush_all()  # a clean durable base: a crash loses only scenario work
+    return st, model
+
+
+# ------------------------------------------------------------------ scenarios
+# Each scenario mutates (store, model) in lockstep and is deterministic, so a
+# clean run and every crash_after re-run append records at identical sites.
+
+def _prelude_none(st, model) -> None:
+    pass
+
+
+def _prelude_split(st, model) -> None:
+    assert st.split(0)  # synchronous: completes before the scenario starts
+
+
+def scenario_split(st, model) -> None:
+    assert st.split(0)
+
+
+def scenario_merge(st, model) -> None:
+    st.merge(0)
+
+
+def scenario_mid_migration(st, model) -> None:
+    """Background split with application traffic between every tick: writes
+    double-route to the new owner, reads must keep agreeing at each site."""
+    assert st.split(0, background=True)
+    for round_ in range(50):
+        if st.migration is None:
+            break
+        # update one soon-migrated and one long-pending key in the moved range
+        for i in (46 + 3 * round_, 88 - 3 * round_):
+            k, v = make_key(i), _value(i, round_)
+            st.update(k, v)
+            model[k] = v
+        # delete one of each as well (tombstones must shadow stale src copies)
+        for i in (48 + 3 * round_, 87 - 3 * round_):
+            k = make_key(i)
+            st.delete(k)
+            model.pop(k, None)
+        # traffic outside the migrating range: a brand-new key and an update
+        for i, fresh in ((100000 + round_, True), (120 + round_, False)):
+            k, v = make_key(i), _value(i, round_)
+            st.put(k, v) if fresh else st.update(k, v)
+            model[k] = v
+        st.flush_all()       # durable base before the next crash site
+        st.migration_tick()  # the crashable step
+
+
+SCENARIOS = {
+    "split": (_prelude_none, scenario_split),
+    "merge": (_prelude_split, scenario_merge),
+    "mid_migration": (_prelude_none, scenario_mid_migration),
+}
+
+
+# -------------------------------------------------------------------- harness
+def _fresh(name: str, batch_keys: int):
+    st, model = build(batch_keys)
+    prelude, scenario = SCENARIOS[name]
+    prelude(st, model)
+    return st, model, scenario
+
+
+def _site_range(name: str, batch_keys: int) -> tuple[int, int, list[str]]:
+    """(first site, one-past-last site, record kinds) of a clean run."""
+    st, model, scenario = _fresh(name, batch_keys)
+    base = st.metalog.n_records
+    scenario(st, model)
+    kinds = [r["kind"] for r in st.metalog.replay()[base:]]
+    return base, st.metalog.n_records, kinds
+
+
+def _run_with_crash(name: str, batch_keys: int, site: int):
+    st, model, scenario = _fresh(name, batch_keys)
+    st.metalog.crash_after(site)
+    crashed = False
+    try:
+        scenario(st, model)
+    except CrashPoint:
+        crashed = True
+    st.metalog.disarm()
+    st.crash()
+    st.recover()
+    return st, model, crashed
+
+
+def _assert_oracle_identical(st, model, label) -> None:
+    """The differential oracle's invariant: byte-identical point reads over a
+    superset of keys, and a full scan equal to the model's sorted key set —
+    i.e. zero lost keys, zero duplicated keys."""
+    probes = sorted(set(model) | {make_key(i) for i in range(N_KEYS + 20)})
+    for k in probes:
+        assert st.get(k) == model.get(k), (label, k)
+    rows = st.scan(b"", 4 * N_KEYS)
+    assert [k for k, _ in rows] == sorted(model), label
+    assert rows == [(k, model[k]) for k in sorted(model)], label
+
+
+def _verify_site(name: str, batch_keys: int, site: int) -> bool:
+    st, model, crashed = _run_with_crash(name, batch_keys, site)
+    _assert_oracle_identical(st, model, (name, site, "post-recovery"))
+    # an interrupted migration must resume (roll forward) to completion
+    st.drain_migration(max_ticks=10_000)
+    assert st.migration is None, (name, site)
+    assert len(st._all_stores()) == st.num_shards, (name, site)  # src retired
+    _assert_oracle_identical(st, model, (name, site, "post-resume"))
+    return crashed
+
+
+def _sample(base: int, total: int, cap: int) -> list[int]:
+    """Up to ``cap`` sites including both ends and the no-crash control."""
+    sites = list(range(base, total + 1))
+    if len(sites) <= cap:
+        return sites
+    idx = {round(j * (len(sites) - 1) / (cap - 1)) for j in range(cap)}
+    return [sites[i] for i in sorted(idx)]
+
+
+# ---------------------------------------------------------------------- tests
+def test_scenarios_emit_the_expected_record_sites():
+    """Every scenario's WAL stream has a start, >= 3 mid-migration checkpoint
+    ticks, and a finish — the sites the sweeps below enumerate."""
+    for name, start_kind in (("split", "split_start"), ("merge", "merge_start"),
+                             ("mid_migration", "split_start")):
+        base, total, kinds = _site_range(name, BATCH_KEYS)
+        assert total > base, name
+        assert kinds[0] == start_kind, (name, kinds)
+        assert kinds[-1] == "finish", (name, kinds)
+        assert kinds.count("checkpoint") >= 3, (name, kinds)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_crashpoints_tier1_sample(name):
+    """Tier-1: crash + recover + resume at a capped sample of record sites
+    (with the standard batch size the cap covers every site)."""
+    base, total, _ = _site_range(name, BATCH_KEYS)
+    for site in _sample(base, total, TIER1_SITE_CAP):
+        crashed = _verify_site(name, BATCH_KEYS, site)
+        assert crashed == (site < total), (name, site)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_crashpoints_exhaustive(name):
+    """Slow sweep: a finer migration batch multiplies the checkpoint sites;
+    enumerate and crash at every single one (plus the no-crash control)."""
+    base, total, kinds = _site_range(name, FINE_BATCH_KEYS)
+    assert kinds.count("checkpoint") >= 8, (name, kinds)
+    for site in range(base, total + 1):
+        crashed = _verify_site(name, FINE_BATCH_KEYS, site)
+        assert crashed == (site < total), (name, site)
+
+
+def test_crash_at_first_site_means_nothing_happened():
+    """Control: crashing before the first scenario record leaves the store
+    exactly at the prelude state (the aborted action never was)."""
+    base, _, _ = _site_range("split", BATCH_KEYS)
+    st, model, crashed = _run_with_crash("split", BATCH_KEYS, base)
+    assert crashed
+    assert st.num_shards == 2 and st.migration is None
+    _assert_oracle_identical(st, model, "control")

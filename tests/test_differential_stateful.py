@@ -1,11 +1,14 @@
 """Hypothesis stateful differential oracle (optional-deps policy: skips
 without hypothesis; the deterministic streams in ``test_differential.py``
-always run).
+and the crash-site enumeration in ``test_crashpoints.py`` always run).
 
-Random op interleavings — puts, updates, deletes, forced rebalances — drive a
-bare ParallaxStore, a hash-ShardedStore and a RangeShardedStore alongside a
-plain dict model; every get, scan and the full key set must agree at every
-step.
+Random op interleavings — puts, updates, deletes, background splits/merges,
+migration ticks, whole-fleet crash/recover, and injected crashes at
+shard-metadata WAL record sites (``crash_after``) — drive a bare
+ParallaxStore, a hash-ShardedStore and a RangeShardedStore alongside a plain
+dict model; every get, scan and the full key set must agree at every step,
+including while an incremental migration is in flight (double-routed reads)
+and after it is interrupted by a crash and resumed.
 """
 import pytest
 
@@ -13,6 +16,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import settings, strategies as st  # noqa: E402
 from hypothesis.stateful import RuleBasedStateMachine, initialize, invariant, rule  # noqa: E402
 
+from repro.core.metalog import CrashPoint  # noqa: E402
 from repro.core.ycsb import make_key, payload  # noqa: E402
 
 from test_differential import make_fleet  # noqa: E402
@@ -22,17 +26,30 @@ _SIZES = st.sampled_from([9, 104, 1004])
 
 
 class DifferentialMachine(RuleBasedStateMachine):
-    """Random op interleavings: three stores + a dict model must agree."""
+    """Random op/migration/crash interleavings: three stores + a dict model
+    must agree at every step."""
 
     @initialize()
     def setup(self):
-        self.fleet = make_fleet(90, num_shards=2, rebalance_window=60)
+        # small migration batches keep migrations in flight across many steps
+        self.fleet = make_fleet(90, num_shards=2, rebalance_window=60,
+                                min_split_keys=4, migration_batch_keys=3)
         self.model: dict[bytes, bytes] = {}
         self.n = 0
 
     def _everywhere(self, fn):
         for store in self.fleet.values():
             fn(store)
+
+    def _rng(self):
+        return self.fleet["range"]
+
+    def _hottest(self):
+        rng = self._rng()
+        return max(
+            range(rng.num_shards),
+            key=lambda i: len(rng.shards[i].live_keys_in(*rng.bounds(i))),
+        )
 
     @rule(i=_KEYS, size=_SIZES)
     def put(self, i, size):
@@ -70,7 +87,59 @@ class DifferentialMachine(RuleBasedStateMachine):
 
     @rule()
     def rebalance(self):
-        self.fleet["range"].rebalance_tick(force=True)
+        self._rng().rebalance_tick(force=True)
+
+    # ------------------------------------------------ migration interleavings
+    @rule()
+    def split_hottest(self):
+        rng = self._rng()
+        if rng.migration is None and rng.num_shards < 6:
+            rng.split(self._hottest(), background=True)
+
+    @rule()
+    def merge_coldest(self):
+        rng = self._rng()
+        if rng.migration is None and rng.num_shards > 1:
+            cold = min(
+                range(rng.num_shards - 1),
+                key=lambda i: len(rng.shards[i].live_keys_in(*rng.bounds(i)))
+                + len(rng.shards[i + 1].live_keys_in(*rng.bounds(i + 1))),
+            )
+            rng.merge(cold, background=True)
+
+    @rule(budget=st.integers(min_value=1, max_value=8))
+    def migration_tick(self, budget):
+        self._rng().migration_tick(budget)
+
+    # ---------------------------------------------------- crash interleavings
+    @rule()
+    def crash_recover(self):
+        # equalize durability first (the dict model has no crash semantics):
+        # the crash then loses only in-flight migration work, which recovery
+        # must roll forward without losing or duplicating a key
+        self._everywhere(lambda s: s.flush_all())
+        for s in self.fleet.values():
+            s.crash()
+            s.recover()
+
+    @rule(offset=st.integers(min_value=0, max_value=4))
+    def crash_after(self, offset):
+        """Arm an injected crash a few WAL records ahead, drive migration
+        work into it, then crash+recover the range store: the interrupted
+        protocol step must leave a recoverable, oracle-identical state."""
+        rng = self._rng()
+        self._everywhere(lambda s: s.flush_all())
+        rng.metalog.crash_after(rng.metalog.n_records + offset)
+        try:
+            if rng.migration is None and rng.num_shards < 6:
+                rng.split(self._hottest(), background=True)
+            for _ in range(offset + 2):
+                rng.migration_tick()
+        except CrashPoint:
+            rng.crash()
+            rng.recover()
+        finally:
+            rng.metalog.disarm()
 
     @invariant()
     def key_sets_agree(self):

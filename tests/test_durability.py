@@ -138,44 +138,55 @@ def _assert_no_lost_or_dup(st: RangeShardedStore, n_keys: int) -> None:
     assert keys == [make_key(i) for i in range(n_keys)]  # sorted, no dups
 
 
-def test_crash_before_boundary_flip_keeps_old_shard_authoritative():
-    """Window A: crash after the copy but before the new shard is adopted —
-    the split aborts, the old shard still owns and serves the whole range."""
+def test_crash_before_split_start_record_aborts_the_split():
+    """Window A: crash before the ``split_start`` record lands — the split
+    never was: the old shard still owns and serves the whole range, and the
+    orphan destination shard is dropped by recovery replay."""
+    from repro.core.metalog import CrashPoint
+
     st = _loaded_range_store()
-    orig_new_shard = st._new_shard
-
-    def exploding_new_shard():
-        dst = orig_new_shard()
-        dst.flush_all = lambda: (_ for _ in ()).throw(_CrashNow())
-        return dst
-
-    st._new_shard = exploding_new_shard
-    with pytest.raises(_CrashNow):
+    st.metalog.crash_after(st.metalog.n_records)  # the very next record dies
+    with pytest.raises(CrashPoint):
         st.split(0)
-    st._new_shard = orig_new_shard
+    st.metalog.disarm()
     assert st.num_shards == 2  # metadata never flipped
     st.crash()
     st.recover()
+    assert st.num_shards == 2 and len(st._all_stores()) == 2  # orphan dropped
+    _assert_no_lost_or_dup(st, 600)
+    # the map is still splittable afterwards
+    assert st.split(0)
     _assert_no_lost_or_dup(st, 600)
 
 
 def test_crash_after_boundary_flip_before_ranged_delete():
-    """Window B: the new shard is durable and adopted, but the old shard never
-    dropped the moved range — stale copies must be unreachable."""
+    """Window B: the boundary flipped (``split_start`` durable) and the first
+    batch was copied+flushed, but its checkpoint record — and therefore the
+    old shard's ranged delete — never happened.  Recovery resumes the
+    migration at the start cursor; stale copies in the old shard must be
+    unreachable (the new owner answers first, and below the cursor the old
+    shard is never consulted)."""
+    from repro.core.metalog import CrashPoint
+
     st = _loaded_range_store()
-    src = st.shards[0]
-    src.delete_range = lambda *a, **kw: (_ for _ in ()).throw(_CrashNow())
-    with pytest.raises(_CrashNow):
+    st.metalog.crash_after(st.metalog.n_records + 1)  # split_start lands,
+    with pytest.raises(CrashPoint):                   # 1st checkpoint dies
         st.split(0)
-    del src.delete_range
+    st.metalog.disarm()
     assert st.num_shards == 3  # boundary flipped before the crash
     st.crash()
     st.recover()
+    assert st.migration is not None  # the interrupted migration is live again
+    assert st.migration.cursor == st.migration.lo  # no checkpoint was durable
     _assert_no_lost_or_dup(st, 600)
-    # the stale copies really are still in the old shard (unflushed deletes
-    # never happened), proving the clipping/routing is what protects reads
+    # the stale copies really are still in the old shard (the ranged delete
+    # never ran), proving double-routing is what protects reads
     lo, hi = st.bounds(0)
     assert st.shards[0].live_keys_in(hi, None), "expected stale migrated copies"
+    # and the migration rolls forward to completion
+    st.drain_migration()
+    assert st.migration is None
+    _assert_no_lost_or_dup(st, 600)
 
 
 def test_crash_mid_ranged_delete_drops_unflushed_tombstones():

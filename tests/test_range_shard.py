@@ -156,6 +156,105 @@ def test_crash_recover_after_rebalance():
     assert [k for k, _ in st.scan(b"", 500)] == [make_key(i) for i in range(400)]
 
 
+def test_double_routing_read_counts_extra_probe():
+    """Regression (PR 3): a pending-region read that misses the new owner and
+    falls back to the draining old shard costs one extra front-end probe —
+    ``get_probes``/``get_fallbacks`` record it, scans count the extra shard."""
+    st = store_with_keys(300, 2, auto_rebalance=False, migration_batch_keys=10)
+    assert st.split(0, background=True)        # moved range [key75, key150)
+    m = st.migration
+    assert m is not None and m.cursor == m.lo  # nothing copied yet
+    g0, p0, f0 = st.gets, st.get_probes, st.get_fallbacks
+    # pending key: new owner misses, old shard serves -> 2 probes, 1 fallback
+    assert st.get(make_key(140)) == b"v" * 60
+    assert (st.gets, st.get_probes, st.get_fallbacks) == (g0 + 1, p0 + 2, f0 + 1)
+    # untouched shard: the usual single probe
+    assert st.get(make_key(10)) == b"v" * 60
+    assert (st.gets, st.get_probes, st.get_fallbacks) == (g0 + 2, p0 + 3, f0 + 1)
+    # a scan overlapping the pending window consults the draining source too
+    s0, sp0 = st.scans, st.scan_probes
+    rows = st.scan(make_key(140), 5)
+    assert [k for k, _ in rows] == [make_key(i) for i in range(140, 145)]
+    assert (st.scans, st.scan_probes) == (s0 + 1, sp0 + 2)
+    # the scan's batch hook ticked the migration: keys below the cursor are
+    # the new owner's alone again — back to a single probe, no fallback
+    assert m.cursor > m.lo
+    g, p, f = st.gets, st.get_probes, st.get_fallbacks
+    assert st.get(make_key(76)) == b"v" * 60
+    assert (st.gets, st.get_probes, st.get_fallbacks) == (g + 1, p + 1, f)
+
+
+def test_fallback_reads_fold_into_retired_shard_stats():
+    """Regression (PR 3): with incremental merges a shard serves double-routed
+    reads *while draining* and only retires once drained — the reads it served
+    must survive the retirement stat folding."""
+    st = store_with_keys(200, 2, auto_rebalance=False, migration_batch_keys=20)
+    st.merge(0, background=True)
+    assert st.migration is not None
+    for i in range(150, 160):  # pending keys: served by the draining source
+        assert st.get(make_key(i)) == b"v" * 60
+    assert st.get_fallbacks >= 10
+    gets_total = st.aggregate_stats().gets
+    st.drain_migration()
+    assert st.migration is None
+    assert len(st._all_stores()) == st.num_shards == 1  # source retired
+    # the drained shard's read history survives its retirement
+    assert st.aggregate_stats().gets == gets_total
+    assert st.aggregate_stats().inserts == 200
+
+
+def test_background_split_is_incremental_and_bounded_per_tick():
+    """The migration copies at most ``migration_batch_keys`` per tick and the
+    metadata WAL records every checkpoint."""
+    st = store_with_keys(300, 2, auto_rebalance=False, migration_batch_keys=10)
+    rec0 = st.metalog.n_records
+    assert st.split(0, background=True)
+    assert st.migration is not None
+    ticks = 0
+    while st.migration is not None:
+        moved = st.migration_tick()
+        assert moved <= 10
+        ticks += 1
+        assert ticks < 100
+    assert ticks >= 75 // 10  # ~75 moved keys at 10/tick
+    kinds = [r["kind"] for r in st.metalog.replay()[rec0:]]
+    assert kinds[0] == "split_start" and kinds[-1] == "finish"
+    assert kinds.count("checkpoint") == ticks
+    assert st.migrated_keys == 75
+    assert st.device_stats().meta_written > 0  # WAL bytes hit amplification
+
+
+def test_bounded_scan_during_merge_with_residue():
+    """Regression (PR 3 review): a *bounded* scan over a merge destination
+    whose pending window holds pre-flip residue must return the true merged
+    prefix — no resurrected residue, no deleted key, and no skipped post-flip
+    insert — even when the residue outnumbers the scan's count."""
+    st = store_with_keys(200, 2, auto_rebalance=False, migration_batch_keys=500)
+    # full split, then crash: the unflushed ranged-delete tombstones are lost,
+    # leaving stale live copies of the whole moved range [key50, key100) in
+    # shard 0
+    assert st.split(0)
+    st.crash()
+    st.recover()
+    lo, hi = st.bounds(0)
+    assert st.shards[0].live_keys_in(hi, None), "expected stale residue"
+    # delete some moved keys (tombstones land in their current owner, shard 1)
+    for i in (52, 54, 56, 58):
+        st.delete(make_key(i))
+    # merge shard 1 back: shard 0 becomes a migration destination whose
+    # pending window is packed with pre-flip residue
+    st.merge(0, background=True)
+    assert st.migration is not None
+    # a post-flip insert sorting between residue keys
+    kx = make_key(52) + b"!"
+    st.put(kx, b"v" * 60)
+    expect = [make_key(50), make_key(51), kx, make_key(53), make_key(55),
+              make_key(57), make_key(59), make_key(60)]
+    assert [k for k, _ in st.scan(make_key(50), 8)] == expect
+    st.drain_migration()
+    assert [k for k, _ in st.scan(make_key(50), 8)] == expect
+
+
 def test_delete_range_hook():
     bare = ParallaxStore(small_config())
     for i in range(200):
