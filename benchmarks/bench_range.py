@@ -34,6 +34,7 @@ import dataclasses
 import time
 
 from .common import AVG_KV, C_BYTE, C_GC_LOOKUP, C_MERGE, C_OP, C_PROBE, CLOCK_HZ, scaled_config
+from .common import run_async_claim
 from repro.core import RangeShardedStore, ShardedStore
 from repro.core.ycsb import Workload, execute, make_key
 
@@ -174,6 +175,33 @@ def main(emit, smoke: bool = False) -> None:
         f"throttled_tail_bytes={max(thr_ticks)};throttled_ticks={len(thr_ticks)};"
         f"meta_wal_bytes={meta_bytes};amp_incl_meta={thr_store.amplification():.2f}"
     )
+
+    # claim 5 (PR 4, acceptance): async wall-clock throughput on the range
+    # front-end — even with the per-batch policy sequence point (the range
+    # store's rebalancer hook drains the pipeline every batch), within-batch
+    # shard fan-out still overlaps the paced device time >= 2x with 4 workers
+    # on run C.  8 shards, not 4: zipf point reads concentrate device time in
+    # a hot shard, and LPT-packing 8 shard times onto 4 workers rides out the
+    # skew (the modeled channels:4 ceiling shows the same effect)
+    async_n, async_workers = 8, 4
+    async_cfg = dataclasses.replace(
+        base_cfg,
+        l0_capacity=max(base_cfg.l0_capacity // async_n, 1 << 11),
+        cache_bytes=base_cfg.cache_bytes // async_n,
+        bloom_bits_per_key=10,
+    )
+
+    def make_async_store() -> RangeShardedStore:
+        # a static balanced topology: the paced comparison measures execution
+        # overlap, not rebalancing (bench claims 2/4 cover the policy)
+        st = RangeShardedStore.for_keys(sample, async_n, async_cfg, auto_rebalance=False)
+        execute(st, load_w.load_ops(), batch_size=BATCH)
+        return st
+
+    run_c = lambda: Workload("run_c", MIX, num_keys=keys, num_ops=num_ops).run_ops()
+    run_async_claim(emit, "range:async",
+                    f"range:async:run_c/range-x{async_n}w{async_workers}",
+                    make_async_store, run_c, workers=async_workers, batch=BATCH)
 
     # claim 2: the skew-driven splitter adapts a degenerate map — start with
     # uniform byte boundaries (all YCSB keys in one shard) and let run E's

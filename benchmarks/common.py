@@ -18,8 +18,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.core import ParallaxStore, StoreConfig
-from repro.core.ycsb import Workload, execute
+from repro.core import ParallaxStore, StoreConfig, overlap_time
+from repro.core.ycsb import Workload, execute, execute_async
 
 # modeled CPU constants (cycles); see module docstring
 C_OP = 2_000          # per user op (parse, memtable, WAL append)
@@ -108,6 +108,111 @@ def run_phase(name: str, system: str, store: ParallaxStore, workload_ops, ops_co
     ops = sum(counts.values())
     amp, kops, kcyc = metrics(store, ops, since=since, app_since=app0)
     return BenchResult(name, system, ops, amp, kops, kcyc, time.time() - t0)
+
+
+def async_speedup_phase(make_store, run_ops_factory, *, workers: int = 4,
+                        batch: int = 64, target_serial_s: float = 0.8) -> dict:
+    """Measured wall-clock of the async engine vs its 1-worker serialization,
+    against the modeled overlap policies, on one workload phase.
+
+    ``make_store`` must build an identically-loaded sharded store each call
+    (three are built: a model probe plus the two paced runs).  The probe runs
+    the phase on the plain serial path and yields per-shard device-time
+    deltas, from which the ``serial`` / ``channels:k`` / ``ideal`` policy
+    times are modeled (:func:`repro.core.io.overlap_time`) and the pace is
+    chosen so the paced 1-worker run sleeps ~``target_serial_s`` — the GIL
+    makes *CPU* overlap impossible, so wall-clock comparisons are meaningful
+    exactly for the paced device time (see docs/execution.md).  Both paced
+    runs must finish with byte-identical per-shard device stats (pacing and
+    threading change no state — the executor's core claim).
+
+    Returns ``model`` (policy -> modeled seconds), ``walls`` (workers ->
+    measured seconds), ``speedup`` (1-worker wall / k-worker wall), ``pace``.
+    """
+    probe = make_store()
+    before = probe.device_times()
+    execute(probe, run_ops_factory(), batch_size=batch)
+    after = probe.device_times()
+    # per-store deltas are positional: a topology change mid-phase (a range
+    # store with its rebalancer live) would misalign them silently — callers
+    # must measure on a static topology (hash, or auto_rebalance=False)
+    assert len(after) == len(before), (
+        f"topology changed during the model probe ({len(before)} -> {len(after)} "
+        "stores); async_speedup_phase needs a static topology"
+    )
+    deltas = [a - b for a, b in zip(after, before)]
+    policies = ("serial", "channels:2", f"channels:{workers}", "ideal")
+    model = {p: overlap_time(deltas, p) for p in policies}
+    pace = target_serial_s / max(model["serial"], 1e-9)
+    walls: dict[int, float] = {}
+    fleets: dict[int, list] = {}
+    for w, pipelined in ((1, False), (workers, True)):
+        store = make_store()
+        t0 = time.time()
+        execute_async(store, run_ops_factory(), batch_size=batch, workers=w,
+                      pipeline=pipelined, pace=pace)
+        walls[w] = time.time() - t0
+        fleets[w] = [dataclasses.asdict(s.device.stats) for s in store._all_stores()]
+    assert fleets[1] == fleets[workers], "pacing/threading must not change device traffic"
+    return {
+        "model": model,
+        "walls": walls,
+        "speedup": walls[1] / max(walls[workers], 1e-9),
+        "pace": pace,
+    }
+
+
+def async_speedup_row(name: str, r: dict, workers: int) -> str:
+    """CSV row for an async_speedup_phase result.  Timing-dependent fields
+    end in ``_s`` or are named ``speedup``/``pace`` so the bench-regression
+    gate (scripts/check_bench.py) knows to skip them; the ``model_*_us``
+    fields are deterministic and gated."""
+    model = ";".join(
+        f"model_{p.replace(':', '')}_us={t * 1e6:.1f}" for p, t in r["model"].items()
+    )
+    return (
+        f"{name},0,{model};speedup={r['speedup']:.2f};"
+        f"serial_wall_s={r['walls'][1]:.3f};async_wall_s={r['walls'][workers]:.3f};"
+        f"pace={r['pace']:.0f}"
+    )
+
+
+def run_async_claim(emit, prefix: str, row_name: str, make_store, run_ops_factory,
+                    *, workers: int = 4, batch: int = 64,
+                    target_serial_s: float = 2.0) -> dict:
+    """The PR 4 async acceptance claim, shared by bench_shard/bench_range:
+    measure the paced speedup phase, emit the model-vs-measured row and the
+    gate status row, and assert the >=2x wall-clock claim (when meaningful)
+    plus the model ladder.  One call site per bench keeps the two benches'
+    acceptance criteria identical by construction."""
+    r = async_speedup_phase(make_store, run_ops_factory, workers=workers,
+                            batch=batch, target_serial_s=target_serial_s)
+    emit(async_speedup_row(row_name, r, workers))
+    emit_speedup_gate(emit, prefix, r, workers, target_serial_s)
+    return r
+
+
+def emit_speedup_gate(emit, prefix: str, r: dict, workers: int,
+                      target_serial_s: float, min_speedup: float = 2.0) -> None:
+    """The PR 4 acceptance gate on an async_speedup_phase result.
+
+    The wall-clock assertion is only meaningful while sleeps dominate: the
+    non-sleep share of the 1-worker wall (GIL-serialized CPU + executor
+    overhead, added equally to both walls) compresses the ratio, so on a
+    pathologically loaded host (CPU share > 0.3x the paced sleep — where even
+    a >=3x overlap could be squeezed under 2x with no code regression) the
+    assertion is skipped.  The ``:gate`` status row is emitted either way
+    (deterministic presence; scripts/check_bench.py excludes ``:gate`` rows
+    from the regression diff since their values are host-load-dependent).
+    Also asserts the modeled policy ladder is consistent.
+    """
+    cpu_overhead = r["walls"][1] - target_serial_s
+    applied = cpu_overhead <= 0.3 * target_serial_s
+    emit(f"{prefix}:gate,0,speedup_gate={'applied' if applied else 'skipped_cpu_bound'};"
+         f"cpu_overhead_s={cpu_overhead:.2f}")
+    if applied:
+        assert r["speedup"] >= min_speedup, r
+    assert r["model"]["ideal"] <= r["model"][f"channels:{workers}"] <= r["model"]["serial"], r
 
 
 def load_then_run(name: str, mode: str, mix: str, *, num_keys: int, num_ops: int,

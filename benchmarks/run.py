@@ -7,9 +7,19 @@ failures here mean the reproduction no longer matches the paper.
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run fig1 merge  # substring filter
     PYTHONPATH=src python -m benchmarks.run --smoke     # CI: tiny shard+ycsb
+    PYTHONPATH=src python -m benchmarks.run --smoke --json OUT.json
+                                                        # + machine-readable rows
+
+``--json`` writes every emitted row as ``{"name", "us_per_call", "derived"}``
+(plus the failure list); ``scripts/check_bench.py`` diffs such a file against
+the checked-in ``BENCH_BASELINE.json`` — that pair is the CI bench-regression
+gate (.github/workflows/ci.yml).  A substring filter that matches nothing is
+an error (exit 2, listing valid names): CI must not green-light a typo'd
+bench job by silently running zero benchmarks.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -56,24 +66,66 @@ SMOKE_BENCHES = [
 
 
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
-    benches = SMOKE_BENCHES if "--smoke" in sys.argv[1:] else BENCHES
+    argv = list(sys.argv[1:])
+    json_out: str | None = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            print("error: --json needs an output path", file=sys.stderr)
+            sys.exit(2)
+        json_out = argv[i + 1]
+        del argv[i:i + 2]
+    smoke = "--smoke" in argv
+    unknown = [a for a in argv if a.startswith("-") and a != "--smoke"]
+    if unknown:
+        # same failure class as the zero-match filter: a typo'd flag silently
+        # running the wrong bench set must not green-light a CI job
+        print(f"error: unknown flag(s) {unknown!r}; valid flags: --smoke, --json OUT.json",
+              file=sys.stderr)
+        sys.exit(2)
+    filters = [a for a in argv if not a.startswith("-")]
+    benches = SMOKE_BENCHES if smoke else BENCHES
+    selected = [(name, fn) for name, fn in benches
+                if not filters or any(f in name for f in filters)]
+    if filters and not selected:
+        valid = ", ".join(name for name, _ in benches)
+        print(f"error: filter(s) {filters!r} matched no benchmarks; "
+              f"valid names ({'smoke' if smoke else 'full'} set): {valid}",
+              file=sys.stderr)
+        sys.exit(2)
+
+    rows: list[str] = []
+
+    def emit(row: str) -> None:
+        print(row, flush=True)
+        rows.append(row)
+
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in benches:
-        if filters and not any(f in name for f in filters):
-            continue
+    for name, fn in selected:
         t0 = time.time()
         try:
-            fn(lambda row: print(row, flush=True))
-            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+            fn(emit)
+            emit(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ok")
         except AssertionError as e:
             failures.append((name, e))
-            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},CLAIM-FAILED:{e}", flush=True)
+            emit(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},CLAIM-FAILED:{e}")
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             traceback.print_exc()
-            print(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}", flush=True)
+            emit(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}")
+    if json_out:
+        payload = {
+            "smoke": smoke,
+            "rows": [
+                dict(zip(("name", "us_per_call", "derived"), row.split(",", 2)))
+                for row in rows
+            ],
+            "failures": [name for name, _ in failures],
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff a ``--json`` bench run against the baseline.
+
+    python scripts/check_bench.py CURRENT.json BENCH_BASELINE.json [--tol 0.35]
+
+Compares every baseline row (by name, honoring duplicates in emission order)
+against the current run:
+
+* rows missing from the current run fail (a bench silently stopped running —
+  exactly the hole the zero-match filter fix closes at the harness level);
+* the ``derived`` field is parsed as ``key=value;key=value``: numeric values
+  must agree within ``--tol`` relative tolerance, non-numeric values (claim
+  strings like ``ok``/``lower``/``true``) must match exactly;
+* **timing-dependent fields are skipped**: any key ending in ``_s`` (wall
+  seconds) and the keys ``speedup``/``pace``/``us``, plus the whole
+  ``us_per_call`` column — CI runners' wall-clock is noise, but the modeled
+  metrics (amp, kops, probes, device/meta bytes, ``model_*_us`` overlap
+  times) are deterministic byte-accounting and *are* gated;
+* rows present only in the current run warn (new benches don't fail the gate;
+  refresh the baseline to start gating them:
+  ``PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_BASELINE.json``).
+
+The default tolerance is intentionally generous (the ISSUE's "stop the perf
+trajectory being empty" gate, not a bit-exactness oracle — tighten once the
+noise floor is known); determinism itself is enforced separately by
+``tests/test_determinism.py``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SKIP_KEYS = {"speedup", "pace", "us"}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    out: dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def is_timing_key(key: str) -> bool:
+    return key in SKIP_KEYS or key.endswith("_s")
+
+
+def numeric(v: str) -> float | None:
+    try:
+        return float(v)
+    except ValueError:
+        return None
+
+
+def index_rows(payload: dict) -> dict[tuple[str, int], dict]:
+    """Rows keyed by (name, occurrence): some benches emit a name twice."""
+    seen: dict[str, int] = {}
+    out: dict[tuple[str, int], dict] = {}
+    for row in payload["rows"]:
+        n = seen.get(row["name"], 0)
+        seen[row["name"]] = n + 1
+        out[(row["name"], n)] = row
+    return out
+
+
+def is_informational(name: str) -> bool:
+    """Rows whose presence/values are host-load-dependent, never gated: the
+    benches' ``*:async:gate`` status rows (speedup applied vs skipped)."""
+    return name.endswith(":gate")
+
+
+def compare(current: dict, baseline: dict, tol: float) -> tuple[list[str], list[str]]:
+    problems: list[str] = []
+    warnings: list[str] = []
+    cur = {k: v for k, v in index_rows(current).items() if not is_informational(k[0])}
+    base = {k: v for k, v in index_rows(baseline).items() if not is_informational(k[0])}
+    for key, brow in base.items():
+        name = f"{key[0]}#{key[1]}" if key[1] else key[0]
+        crow = cur.get(key)
+        if crow is None:
+            problems.append(f"missing row: {name} (bench no longer emits it)")
+            continue
+        bvals, cvals = parse_derived(brow["derived"]), parse_derived(crow["derived"])
+        # claim rows carry bare strings (e.g. 'ok', 'CLAIM-FAILED:...'), not k=v
+        if not bvals and brow["derived"] != crow["derived"]:
+            problems.append(f"{name}: derived {crow['derived']!r} != baseline {brow['derived']!r}")
+            continue
+        for k, bv in bvals.items():
+            if is_timing_key(k):
+                continue
+            cv = cvals.get(k)
+            if cv is None:
+                problems.append(f"{name}: field {k} disappeared (baseline {bv})")
+                continue
+            bn, cn = numeric(bv), numeric(cv)
+            if bn is None or cn is None:
+                if bv != cv:
+                    problems.append(f"{name}: {k}={cv!r} != baseline {bv!r}")
+                continue
+            rel = abs(cn - bn) / max(abs(cn), abs(bn), 1e-12)
+            if rel > tol:
+                problems.append(
+                    f"{name}: {k}={cn:g} vs baseline {bn:g} "
+                    f"(rel diff {rel:.2f} > tol {tol})"
+                )
+    for key in cur.keys() - base.keys():
+        warnings.append(f"new row not in baseline (not gated): {key[0]}#{key[1]}")
+    if current.get("failures"):
+        problems.append(f"bench failures: {current['failures']}")
+    return problems, warnings
+
+
+def main(argv: list[str]) -> int:
+    tol = 0.35
+    args: list[str] = []
+    it = iter(argv)
+    for a in it:
+        if a == "--tol":
+            try:
+                tol = float(next(it))
+            except (StopIteration, ValueError):
+                print("error: --tol needs a number", file=sys.stderr)
+                return 2
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(args[0]) as f:
+        current = json.load(f)
+    with open(args[1]) as f:
+        baseline = json.load(f)
+    problems, warnings = compare(current, baseline, tol)
+    for w in warnings:
+        print(f"WARN  {w}")
+    for p in problems:
+        print(f"FAIL  {p}")
+    checked = len(baseline["rows"])
+    if problems:
+        print(f"bench gate: {len(problems)} problem(s) across {checked} baseline rows")
+        return 1
+    print(f"bench gate: OK ({checked} baseline rows, tol {tol}, {len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

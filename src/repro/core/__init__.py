@@ -19,8 +19,14 @@ Public surface:
   ``crash_after`` fault-injection hook for the crash-point harness)
 * per-level bloom filters (:class:`repro.core.lsm.BloomFilter`) let point
   reads skip levels; skips are counted in ``StoreStats.bloom_skips``
+* :class:`repro.core.exec.ShardExecutor` — async pipelined shard execution:
+  per-shard FIFO queues on a thread pool, pipelined batches, background
+  GC/migration at sequence points, byte-identical to serial execution
+  (``ycsb.execute_async`` is the batch driver); pluggable device overlap
+  policies (:func:`repro.core.io.overlap_time`: serial / ideal / channels:k)
 """
-from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats
+from .exec import BatchHandle, ShardExecutor
+from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats, overlap_time
 from .logs import Log, LogEntry, Pointer, TransientLog
 from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, BloomFilter, IndexEntry, Level
 from .metalog import CrashPoint, MetadataLog
@@ -40,7 +46,8 @@ from .shard import BaseShardedStore, ShardedStore, route
 from .store import ParallaxStore, StoreConfig, StoreStats
 
 __all__ = [
-    "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats",
+    "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats", "overlap_time",
+    "BatchHandle", "ShardExecutor",
     "Log", "LogEntry", "Pointer", "TransientLog",
     "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
     "CrashPoint", "MetadataLog",

@@ -28,6 +28,8 @@ metadata WAL shows up in amplification stats (``DeviceStats.meta_written``).
 """
 from __future__ import annotations
 
+import threading
+
 from .io import Device
 from .logs import Log, LogEntry
 from .lsm import CAT_SMALL
@@ -54,6 +56,15 @@ class MetadataLog:
     (``kind="meta"``).  There is no truncation/compaction — the record stream
     in these workloads is tiny, and keeping every record means ``replay()``
     always reconstructs from genesis (the ``init`` record).
+
+    Background-checkpoint ordering (PR 4): the WAL's correctness rests on
+    record order matching protocol-apply order — a ``checkpoint`` committed
+    before its batch's destination flush (or two interleaved appends) would
+    break the record-then-apply replay.  With the async engine, migration
+    ticks run only at executor *sequence points* (no foreground tasks in
+    flight), so appends stay totally ordered even when migration runs "in the
+    background"; :meth:`append` asserts the single-writer invariant with a
+    non-blocking lock and raises on concurrent entry rather than interleave.
     """
 
     def __init__(self, device: Device):
@@ -61,6 +72,7 @@ class MetadataLog:
         self._log = Log(device, "meta", kind="meta")
         self.records: list[dict] = []
         self._crash_after: int | None = None
+        self._append_lock = threading.Lock()
 
     @property
     def n_records(self) -> int:
@@ -79,13 +91,21 @@ class MetadataLog:
         written, modeling a power cut between the protocol action and its
         metadata commit.
         """
-        if self._crash_after is not None and len(self.records) >= self._crash_after:
-            raise CrashPoint(len(self.records))
-        payload = _encode(record)
-        self._log.append(LogEntry(len(self.records) + 1, b"", payload, CAT_SMALL))
-        self._log.flush()  # synchronous commit: an acked record is never lost
-        self.records.append(dict(record))
-        return len(self.records) - 1
+        if not self._append_lock.acquire(blocking=False):
+            raise RuntimeError(
+                "concurrent MetadataLog.append: metadata records must be "
+                "totally ordered (append only from executor sequence points)"
+            )
+        try:
+            if self._crash_after is not None and len(self.records) >= self._crash_after:
+                raise CrashPoint(len(self.records))
+            payload = _encode(record)
+            self._log.append(LogEntry(len(self.records) + 1, b"", payload, CAT_SMALL))
+            self._log.flush()  # synchronous commit: an acked record is never lost
+            self.records.append(dict(record))
+            return len(self.records) - 1
+        finally:
+            self._append_lock.release()
 
     def replay(self) -> list[dict]:
         """The durable record stream, oldest first (for recovery replay)."""

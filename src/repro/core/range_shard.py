@@ -209,8 +209,12 @@ class RangeShardedStore(BaseShardedStore):
             entry = dst.index_entry(key)  # pure index walk, free
             if entry is not None and entry.lsn > m.epoch_lsn:
                 return dst.get(key)
-            self.get_probes += 1
-            self.get_fallbacks += 1
+            # the one front-end counter mutation that can run on an executor
+            # worker thread (the migration pair's serialized queue): locked so
+            # it never races the coordinator's batch-level counter bumps
+            with self._stats_lock:
+                self.get_probes += 1
+                self.get_fallbacks += 1
             return self._by_id[m.src_id].get(key)
         return self.shards[sid].get(key)
 
@@ -599,10 +603,11 @@ class RangeShardedStore(BaseShardedStore):
     def space_bytes(self) -> int:
         return super().space_bytes() + self.metalog.bytes_appended
 
-    def device_time(self) -> float:
-        """Parallel shard devices, plus the metadata WAL's serial commits —
-        synchronous records block the protocol, they don't overlap shards."""
-        return super().device_time() + self.meta_device.device_time()
+    def device_time(self, policy: str = "ideal") -> float:
+        """Shard devices combined under the overlap policy, plus the metadata
+        WAL's serial commits — synchronous records block the protocol, they
+        never overlap shard traffic regardless of policy."""
+        return super().device_time(policy) + self.meta_device.device_time()
 
     def checkpoint_stats(self) -> dict:
         out = super().checkpoint_stats()

@@ -38,10 +38,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import threading
 import zlib
 from typing import Iterable, Sequence
 
-from .io import DeviceStats
+from .io import DeviceStats, overlap_time
 from .store import ParallaxStore, StoreConfig, StoreStats
 
 # routing uses a different crc32 stream than bloom/cache hashing so shard
@@ -85,6 +86,13 @@ class BaseShardedStore:
         # folded in here so aggregates never lose traffic history
         self.retired_stats = StoreStats()
         self.retired_device = DeviceStats()
+        # Thread-safety (see docs/execution.md): shard stores are only ever
+        # touched by one executor task at a time, but the *front-end* counters
+        # above are shared.  The serial path is single-threaded and never
+        # contends; `repro.core.exec.ShardExecutor` worker threads must hold
+        # this lock for any front-end counter mutation (the double-routing
+        # read path's fallback probes are the one in-worker site).
+        self._stats_lock = threading.Lock()
 
     def _new_shard(self) -> ParallaxStore:
         return ParallaxStore(dataclasses.replace(self.config))
@@ -228,9 +236,17 @@ class BaseShardedStore:
         stats = self.aggregate_stats()
         return self.device_stats().total / max(1, stats.app_bytes)
 
-    def device_time(self) -> float:
-        """Parallel-device completion time: the slowest shard bounds the batch."""
-        return max(s.device.device_time() for s in self._all_stores())
+    def device_times(self) -> list[float]:
+        """Per-store device busy times (one entry per live backing store)."""
+        return [s.device.device_time() for s in self._all_stores()]
+
+    def device_time(self, policy: str = "ideal") -> float:
+        """Completion time of the fleet's device traffic under an overlap
+        policy (:func:`repro.core.io.overlap_time`): ``"ideal"`` — the default
+        and the historical model — is perfect overlap (the slowest shard
+        bounds the batch), ``"serial"`` is no overlap (sum), ``"channels:k"``
+        packs shards onto k NVMe channels (LPT)."""
+        return overlap_time(self.device_times(), policy)
 
     def space_bytes(self) -> int:
         return sum(s.space_bytes() for s in self._all_stores())

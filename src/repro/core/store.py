@@ -29,6 +29,20 @@ and stats are bit-identical across processes — ``hash()`` is randomized by
 
 For the sharded batch front-end layered on top of this class see
 :class:`repro.core.shard.ShardedStore`.
+
+Thread-safety audit (PR 4, see docs/execution.md): a ``ParallaxStore`` is
+**single-threaded by contract** — nothing in here takes a lock.  ``StoreStats``
+counter bumps, ``BlockCache``'s ``OrderedDict`` LRU moves, ``Device`` byte
+accounting, L0 dict mutation, level rebuilds and log segment lists are all
+plain mutations that would race under concurrent callers.  The async engine
+(:class:`repro.core.exec.ShardExecutor`) therefore never lets two tasks touch
+one store: every task runs on its shard's FIFO queue (a migration's src/dst
+pair shares one queue, since double-routed reads touch both), and each task
+additionally asserts exclusivity with a non-blocking per-store lock acquire —
+a failed acquire means the shard-independence invariant broke, and the
+executor raises rather than silently corrupting stats.  ``flush_all``/
+``crash``/``recover`` and topology mutations run only at executor sequence
+points (no tasks in flight).
 """
 from __future__ import annotations
 

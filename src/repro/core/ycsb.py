@@ -214,25 +214,112 @@ def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0,
         store.gc_tick()
         return counts
 
+    for ev, kind, batch in _batch_events(ops, batch_size, gc_every, counts):
+        if ev == "flush":
+            _flush_batch(store, kind, batch)
+            _tick()
+        else:
+            store.gc_tick()
+    store.gc_tick()
+    return counts
+
+
+def _batch_events(ops: Iterator[Op], batch_size: int, gc_every: int,
+                  counts: dict) -> Iterator[tuple[str, str | None, list[Op]]]:
+    """The batch-mode schedule shared by :func:`execute` and
+    :func:`execute_async`: yields ``("flush", kind, batch)`` at every batch
+    boundary (kind change, full batch, gc position, stream tail) and
+    ``("gc", ...)`` at every ``gc_every`` position.  Both drivers consume this
+    one generator, so their flush/tick/gc *positions* are identical by
+    construction — the async path's byte-identical-to-serial contract cannot
+    drift out from under the differential oracle via a one-sided edit.
+    ``counts`` is mutated in place (per-op, as ops are consumed)."""
     batch: list[Op] = []
     kind: str | None = None
     n = 0
     for op in ops:
         if kind is not None and (op.kind != kind or len(batch) >= batch_size):
-            _flush_batch(store, kind, batch)
-            _tick()
+            yield ("flush", kind, batch)
             batch = []
         kind = op.kind
         batch.append(op)
         counts[op.kind] += 1
         n += 1
         if gc_every and n % gc_every == 0:
-            _flush_batch(store, kind, batch)
-            _tick()
+            yield ("flush", kind, batch)
+            yield ("gc", None, [])
             batch, kind = [], None
-            store.gc_tick()
     if kind is not None:
-        _flush_batch(store, kind, batch)
-        _tick()
-    store.gc_tick()
+        yield ("flush", kind, batch)
+
+
+def _flush_batch_async(ex, kind: str, batch: list[Op]) -> None:
+    """Async mirror of :func:`_flush_batch`: shard sub-batches go to the
+    executor's queues; the per-batch policy hook (which the store's batched
+    ops run inline on the serial path) becomes an executor sequence point.
+    Scans run *as* sequence points — :meth:`ShardExecutor.scan` delegates to
+    the store's own ``scan``, which feeds the skew window / ticks the policy
+    internally, exactly like the serial path."""
+    if not batch:
+        return
+    if kind == "insert":
+        ex.put_many([(op.key, payload(op.value_size)) for op in batch])
+        ex.after_batch()
+    elif kind == "update":
+        ex.update_many([(op.key, payload(op.value_size)) for op in batch])
+        ex.after_batch()
+    elif kind == "read":
+        ex.get_many([op.key for op in batch])
+        ex.after_batch()
+    else:
+        for op in batch:
+            ex.scan(op.key, op.scan_len)
+
+
+def execute_async(store, ops: Iterator[Op], *, batch_size: int = 64,
+                  workers: int = 4, pipeline: bool = True, gc_every: int = 0,
+                  migrate_budget: int = 0, pace: float = 0.0,
+                  executor=None) -> dict:
+    """Drive a sharded store through an op stream on the async engine.
+
+    Same batching semantics as :func:`execute` with ``batch_size > 0`` —
+    consecutive same-kind ops group into batches, policy hooks and the
+    optional ``migrate_budget`` tick fire at the same batch boundaries, GC at
+    the same ``gc_every`` positions — but batches are routed on the calling
+    thread and drained by :class:`repro.core.exec.ShardExecutor`'s per-shard
+    queues, pipelined ``pipeline`` deep with ``workers`` pool threads.  The
+    scheduling discipline makes results, stats and per-shard device traffic
+    byte-identical to ``execute(store, ops, batch_size=batch_size,
+    gc_every=gc_every, migrate_budget=migrate_budget)``
+    (``tests/test_exec.py``); only wall-clock changes.  ``pace`` converts
+    modeled device time into real (GIL-releasing) sleeps so the overlap is
+    measurable — see the executor's module docstring.
+
+    Pass ``executor`` to reuse a caller-managed :class:`ShardExecutor`
+    (left open on return); otherwise one is created and closed here.
+    """
+    from .exec import ShardExecutor  # late import: exec builds on this module's peers
+
+    if batch_size < 1:
+        raise ValueError("execute_async needs batch_size >= 1 (per-op mode is serial-only)")
+    ex = executor or ShardExecutor(store, workers, pipeline=pipeline, pace=pace)
+    counts = {"insert": 0, "update": 0, "read": 0, "scan": 0}
+    tickable = migrate_budget > 0 and hasattr(store, "migration_tick")
+
+    def _tick() -> None:
+        if tickable:
+            ex.migration_tick(migrate_budget)
+
+    try:
+        for ev, kind, batch in _batch_events(ops, batch_size, gc_every, counts):
+            if ev == "flush":
+                _flush_batch_async(ex, kind, batch)
+                _tick()
+            else:
+                ex.gc_tick()
+        ex.gc_tick()
+        ex.drain()
+    finally:
+        if executor is None:
+            ex.close(wait=False)
     return counts

@@ -1,0 +1,68 @@
+"""Cross-process determinism: modeled stats must not depend on PYTHONHASHSEED.
+
+PR 1 moved every read-path hash (cache-block choice, bloom probes, shard
+routing) from the randomized builtin ``hash()`` to ``zlib.crc32`` so traffic
+and stats are bit-identical across processes; PR 2 pinned the generator/op
+stream.  This module is the regression net against a reintroduced ``hash()``
+(or any other process-randomized state): the full :class:`DeviceStats` of a
+hash- and a range-sharded run — driven through the *async* executor, with a
+live migration — plus ZipfGenerator samples and route assignments must be
+byte-identical between two subprocesses launched with different
+``PYTHONHASHSEED`` values.  CI additionally pins ``PYTHONHASHSEED=0``
+globally (``.github/workflows/ci.yml``), but the suite must not need it.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import dataclasses, json
+from repro.core import RangeShardedStore, ShardedStore, StoreConfig
+from repro.core.shard import route
+from repro.core.ycsb import Workload, ZipfGenerator, execute_async, make_key
+
+cfg = lambda: StoreConfig(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                          segment_bytes=1 << 14, chunk_bytes=1 << 11,
+                          bloom_bits_per_key=10)
+nk = 300
+load = Workload("load_a", "SD", num_keys=nk, num_ops=0, seed=41)
+run = Workload("run_a", "SD", num_keys=nk, num_ops=200, seed=41)
+
+hashed = ShardedStore(3, cfg())
+execute_async(hashed, load.load_ops(), batch_size=32, workers=2)
+execute_async(hashed, run.run_ops(), batch_size=32, workers=2)
+
+ranged = RangeShardedStore.for_keys([make_key(i) for i in range(nk)], 3, cfg(),
+                                    rebalance_window=80, split_factor=1.05,
+                                    merge_factor=0.9, migration_batch_keys=8)
+execute_async(ranged, load.load_ops(), batch_size=32, workers=2, migrate_budget=4)
+execute_async(ranged, run.run_ops(), batch_size=32, workers=2, migrate_budget=4)
+
+out = {
+    "zipf": ZipfGenerator(2000, seed=9).sample(500).tolist(),
+    "routes": [route(make_key(i), 5) for i in range(400)],
+    "hash_dev": [dataclasses.asdict(s.device.stats) for s in hashed._all_stores()],
+    "hash_agg": dataclasses.asdict(hashed.aggregate_stats()),
+    "range_dev": [dataclasses.asdict(s.device.stats) for s in ranged._all_stores()],
+    "range_meta": dataclasses.asdict(ranged.meta_device.stats),
+    "range_topology": [b.hex() for b in ranged.boundaries],
+    "range_counters": [ranged.splits, ranged.merges, ranged.migrated_keys,
+                       ranged.get_fallbacks, ranged.metalog.n_records],
+}
+print(json.dumps(out, sort_keys=True))
+"""
+
+
+def test_device_stats_identical_across_processes():
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    outputs = []
+    for seed in ("1", "31337"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _SCRIPT],
+            capture_output=True, text=True, check=True,
+            env={**os.environ, "PYTHONPATH": src, "PYTHONHASHSEED": seed},
+        )
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1]
+    assert '"range_counters"' in outputs[0]  # the payload really materialized

@@ -1,0 +1,335 @@
+"""Async executor differential oracle: async == serial, byte for byte.
+
+The :class:`~repro.core.exec.ShardExecutor` scheduling discipline (per-shard
+FIFO queues, migration-pair queue merging, policy ticks at sequence points)
+claims that async execution is *byte-identical* to the serial batched path —
+same get results, same scans, same live key sets, same per-shard
+``DeviceStats`` totals, same metadata-WAL record stream — for every worker
+count, with pipelining on or off, with background migration and GC running,
+and across a crash/recover mid-migration.  This module is that claim's
+enforcement.  Overlap-policy model unit tests ride along.
+"""
+import dataclasses
+import threading
+
+import pytest
+
+from repro.core import (
+    ParallaxStore,
+    RangeShardedStore,
+    ShardedStore,
+    ShardExecutor,
+    StoreConfig,
+    overlap_time,
+)
+from repro.core.ycsb import Workload, execute, execute_async, make_key, payload
+
+BATCH = 32
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11,
+                    bloom_bits_per_key=10)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def device_stats_per_store(store) -> list[dict]:
+    return [dataclasses.asdict(s.device.stats) for s in store._all_stores()]
+
+
+def assert_identical(serial, async_, num_keys: int) -> None:
+    """Full-state agreement: results, stats, and per-shard device traffic."""
+    # device + stats first: the probes below mutate both stores identically
+    assert device_stats_per_store(serial) == device_stats_per_store(async_)
+    assert dataclasses.asdict(serial.aggregate_stats()) == dataclasses.asdict(async_.aggregate_stats())
+    assert (serial.gets, serial.get_probes) == (async_.gets, async_.get_probes)
+    assert (serial.scans, serial.scan_probes) == (async_.scans, async_.scan_probes)
+    probe = [make_key(i) for i in range(num_keys + 50)]
+    assert async_.get_many(probe) == serial.get_many(probe)
+    full_s = serial.scan(b"", 2 * num_keys + 100)
+    full_a = async_.scan(b"", 2 * num_keys + 100)
+    assert full_a == full_s
+    keys_only = [k for k, _ in full_s]
+    assert keys_only == sorted(set(keys_only))
+
+
+def load_ops(nk, seed):
+    return Workload("load_a", "SD", num_keys=nk, num_ops=0, seed=seed).load_ops()
+
+
+def run_ops(nk, nops, seed, kind="run_a"):
+    return Workload(kind, "SD", num_keys=nk, num_ops=nops, seed=seed).run_ops()
+
+
+# --------------------------------------------------------------- hash store
+@pytest.mark.parametrize("workers,pipeline", [(1, False), (2, True), (4, True), (4, False)])
+def test_async_hash_matches_serial(workers, pipeline):
+    nk = 400
+    serial = ShardedStore(4, small_config())
+    async_ = ShardedStore(4, small_config())
+    execute(serial, load_ops(nk, 11), batch_size=BATCH)
+    execute(serial, run_ops(nk, 300, 11), batch_size=BATCH)
+    execute_async(async_, load_ops(nk, 11), batch_size=BATCH,
+                  workers=workers, pipeline=pipeline)
+    execute_async(async_, run_ops(nk, 300, 11), batch_size=BATCH,
+                  workers=workers, pipeline=pipeline)
+    assert_identical(serial, async_, nk)
+
+
+def test_async_hash_background_gc_and_deletes():
+    """gc_every fires per-shard background GC tasks on the async path; the
+    per-shard projection (and therefore GC traffic) must match serial."""
+    nk = 400
+    serial = ShardedStore(3, small_config())
+    async_ = ShardedStore(3, small_config())
+    doomed = [make_key(i) for i in range(50, 350, 3)]
+    back = [(make_key(i), payload(1004)) for i in range(60, 300, 5)]  # large values -> log GC work
+    for store, driver in ((serial, execute), (async_, None)):
+        if driver:
+            execute(store, load_ops(nk, 13), batch_size=BATCH, gc_every=64)
+            store.delete_many(doomed)
+            store.put_many(back)
+            execute(store, run_ops(nk, 200, 13, "run_b"), batch_size=BATCH, gc_every=64)
+        else:
+            execute_async(store, load_ops(nk, 13), batch_size=BATCH, workers=4, gc_every=64)
+            store.delete_many(doomed)
+            store.put_many(back)
+            execute_async(store, run_ops(nk, 200, 13, "run_b"), batch_size=BATCH,
+                          workers=4, gc_every=64)
+    gc_traffic = sum(d["gc_read"] + d["gc_written"] for d in device_stats_per_store(serial))
+    assert gc_traffic > 0  # the oracle only counts if GC really ran
+    assert_identical(serial, async_, nk)
+
+
+def test_async_scan_heavy_matches_serial():
+    nk = 400
+    serial = ShardedStore(4, small_config())
+    async_ = ShardedStore(4, small_config())
+    execute(serial, load_ops(nk, 17), batch_size=BATCH)
+    execute(serial, run_ops(nk, 200, 17, "run_e"), batch_size=BATCH)
+    execute_async(async_, load_ops(nk, 17), batch_size=BATCH, workers=4)
+    execute_async(async_, run_ops(nk, 200, 17, "run_e"), batch_size=BATCH, workers=4)
+    assert_identical(serial, async_, nk + 200)
+
+
+# -------------------------------------------------------------- range store
+def range_pair(nk, **kw):
+    keys = [make_key(i) for i in range(nk)]
+    params = dict(rebalance_window=100, split_factor=1.05, merge_factor=0.9,
+                  migration_batch_keys=16)
+    params.update(kw)
+    return (RangeShardedStore.for_keys(keys, 3, small_config(), **params),
+            RangeShardedStore.for_keys(keys, 3, small_config(), **params))
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_async_range_background_migration_matches_serial(workers):
+    """The headline oracle: live skew rebalancer + throttled migration ticks
+    driven as background sequence points — topology evolution, WAL record
+    stream, double-routed fallbacks and per-shard traffic all byte-identical
+    to serial."""
+    nk = 500
+    serial, async_ = range_pair(nk)
+    execute(serial, load_ops(nk, 19), batch_size=BATCH, migrate_budget=8)
+    execute(serial, run_ops(nk, 400, 19), batch_size=BATCH, migrate_budget=8)
+    execute_async(async_, load_ops(nk, 19), batch_size=BATCH, workers=workers,
+                  migrate_budget=8)
+    execute_async(async_, run_ops(nk, 400, 19), batch_size=BATCH, workers=workers,
+                  migrate_budget=8)
+    assert serial.splits + serial.merges > 0  # the policy really fired
+    assert serial.boundaries == async_.boundaries
+    assert serial._shard_ids == async_._shard_ids
+    assert serial.metalog.records == async_.metalog.records
+    assert serial.get_fallbacks == async_.get_fallbacks
+    assert serial.migrated_keys == async_.migrated_keys
+    assert_identical(serial, async_, nk)
+
+
+def test_async_range_crash_recover_mid_migration():
+    """Crash with a migration in flight on both paths, recover, keep running:
+    the async engine's sequence points make crash/recover safe and the
+    recovered histories stay identical."""
+    nk = 500
+    serial, async_ = range_pair(nk, auto_rebalance=False, migration_batch_keys=1)
+    execute(serial, load_ops(nk, 23), batch_size=BATCH)
+    execute_async(async_, load_ops(nk, 23), batch_size=BATCH, workers=4)
+    for st in (serial, async_):
+        st.flush_all()
+        hot = max(range(st.num_shards),
+                  key=lambda i: len(st.shards[i].live_keys_in(*st.bounds(i))))
+        assert st.split(hot, background=True)
+        st.migration_tick()  # move one batch, leave the rest pending
+        assert st.migration is not None
+    # traffic over the half-migrated topology, then a crash mid-flight (the
+    # 1-key ticks cannot drain the ~80-key migration within 30 ops)
+    execute(serial, run_ops(nk, 30, 23), batch_size=BATCH, migrate_budget=1)
+    execute_async(async_, run_ops(nk, 30, 23), batch_size=BATCH, workers=4,
+                  migrate_budget=1)
+    assert serial.migration is not None and async_.migration is not None
+    for st in (serial, async_):
+        st.crash()
+        st.recover()
+    assert serial.migration is not None and async_.migration is not None
+    assert serial.metalog.records == async_.metalog.records
+    # resume: drive the migration to completion under more traffic
+    execute(serial, run_ops(nk, 150, 29), batch_size=BATCH, migrate_budget=64)
+    execute_async(async_, run_ops(nk, 150, 29), batch_size=BATCH, workers=4,
+                  migrate_budget=64)
+    serial.drain_migration()
+    with ShardExecutor(async_, workers=4) as ex:
+        ex.exclusive(async_.drain_migration)
+    assert serial.migration is None and async_.migration is None
+    assert serial.boundaries == async_.boundaries
+    assert_identical(serial, async_, nk)
+
+
+def test_async_range_paced_matches_unpaced():
+    """Pacing only sleeps — it must not change a single byte of state."""
+    nk = 300
+    serial, async_ = range_pair(nk)
+    execute(serial, load_ops(nk, 31), batch_size=BATCH, migrate_budget=8)
+    execute_async(async_, load_ops(nk, 31), batch_size=BATCH, workers=4,
+                  migrate_budget=8, pace=0.5)
+    assert serial.metalog.records == async_.metalog.records
+    assert_identical(serial, async_, nk)
+
+
+# ----------------------------------------------------------- executor edges
+def test_executor_get_many_returns_values():
+    store = ShardedStore(3, small_config())
+    store.put_many([(make_key(i), payload(104)) for i in range(100)])
+    with ShardExecutor(store, workers=2) as ex:
+        handle = ex.get_many([make_key(i) for i in range(110)])
+        got = handle.result()
+    expect = [payload(104)] * 100 + [None] * 10
+    assert got == expect
+
+
+def test_executor_propagates_task_errors():
+    store = ShardedStore(2, small_config())
+    store.put_many([(make_key(i), b"v" * 40) for i in range(50)])
+    boom = RuntimeError("injected")
+
+    def exploding_get(key):
+        raise boom
+
+    store.shards[0].get = exploding_get
+    ex = ShardExecutor(store, workers=2)
+    try:
+        ex.get_many([make_key(i) for i in range(50)])
+        with pytest.raises(RuntimeError) as err:
+            ex.drain()
+        assert err.value.__cause__ is boom
+    finally:
+        ex.close(wait=False)
+
+
+def test_executor_shard_independence_assertion():
+    """A task that sneaks onto the wrong queue (violating one-task-per-store)
+    trips the non-blocking lock assertion instead of corrupting state."""
+    store = ShardedStore(2, small_config())
+    ex = ShardExecutor(store, workers=2)
+    try:
+        shard = store.shards[0]
+        # simulate a task still owning the store while a mis-queued task for
+        # the same store starts draining
+        assert ex._lock_of(shard).acquire(blocking=False)
+        ex._enqueue(1, [shard], lambda: None, None)  # wrong queue, same store
+        with pytest.raises(RuntimeError) as err:
+            ex.drain()
+        assert "shard-independence" in str(err.value.__cause__)
+    finally:
+        ex._lock_of(shard).release()
+        ex.close(wait=False)
+
+
+def test_get_many_locks_pair_only_on_merged_queue():
+    """Regression: while a migration is in flight, get_many tasks for shards
+    *unrelated* to the migration must not lock the src/dst pair — doing so
+    races the merged pair queue's own tasks and trips the independence
+    assertion spuriously.  A tight thread-switch interval makes the race
+    (which otherwise hides behind GIL preemption timing) deterministic."""
+    import sys
+
+    cfgk = small_config()
+    keys = [make_key(i) for i in range(600)]
+    store = RangeShardedStore.for_keys(keys, 6, cfgk, auto_rebalance=False,
+                                       migration_batch_keys=1)
+    store.put_many([(k, payload(104)) for k in keys])
+    store.flush_all()
+    assert store.split(2, background=True)
+    assert store.migration is not None
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        with ShardExecutor(store, workers=4) as ex:
+            for _ in range(200):
+                ex.get_many(keys)
+            ex.drain()
+    finally:
+        sys.setswitchinterval(old_interval)
+    # results still correct under the pounding
+    assert store.get_many(keys) == [payload(104)] * len(keys)
+
+
+def test_metalog_append_is_single_writer():
+    store = RangeShardedStore(2, small_config())
+    log = store.metalog
+    entered = threading.Event()
+    proceed = threading.Event()
+    orig_flush = log._log.flush
+
+    def stalling_flush():
+        entered.set()
+        assert proceed.wait(timeout=5)
+        orig_flush()
+
+    log._log.flush = stalling_flush
+    t = threading.Thread(target=log.append, args=({"kind": "checkpoint", "cursor": b"x"},))
+    t.start()
+    assert entered.wait(timeout=5)
+    log._log.flush = orig_flush
+    try:
+        with pytest.raises(RuntimeError, match="concurrent MetadataLog.append"):
+            log.append({"kind": "finish"})
+    finally:
+        proceed.set()
+        t.join(timeout=5)
+
+
+# --------------------------------------------------------- overlap policies
+def test_overlap_policy_algebra():
+    times = [4.0, 3.0, 2.0, 2.0, 1.0]
+    assert overlap_time(times, "serial") == pytest.approx(12.0)
+    assert overlap_time(times, "ideal") == pytest.approx(4.0)
+    # channels:1 degenerates to serial; k >= N degenerates to ideal
+    assert overlap_time(times, "channels:1") == pytest.approx(12.0)
+    assert overlap_time(times, "channels:5") == pytest.approx(4.0)
+    assert overlap_time(times, "channels:99") == pytest.approx(4.0)
+    # LPT on 2 channels: 4+2 | 3+2+1 -> makespan 6
+    assert overlap_time(times, "channels:2") == pytest.approx(6.0)
+    # makespan is monotone: more channels never slower, bounded by serial/ideal
+    prev = float("inf")
+    for k in range(1, 7):
+        t = overlap_time(times, f"channels:{k}")
+        assert overlap_time(times, "ideal") <= t <= overlap_time(times, "serial")
+        assert t <= prev
+        prev = t
+    assert overlap_time([], "serial") == 0.0
+    assert overlap_time([0.0, 0.0], "ideal") == 0.0
+    with pytest.raises(ValueError):
+        overlap_time(times, "channels:0")
+    with pytest.raises(ValueError):
+        overlap_time(times, "warp")
+
+
+def test_front_end_device_time_uses_policy():
+    store = ShardedStore(4, small_config())
+    store.put_many([(make_key(i), payload(104)) for i in range(400)])
+    per_shard = store.device_times()
+    assert store.device_time() == pytest.approx(max(per_shard))           # default: ideal
+    assert store.device_time("serial") == pytest.approx(sum(per_shard))
+    assert store.device_time("channels:2") <= store.device_time("serial")
+    assert store.device_time("channels:2") >= store.device_time("ideal")
