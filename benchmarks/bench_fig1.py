@@ -6,8 +6,7 @@ cheaper than in-place, but GC *identification* alone (pure-insert load!)
 pushes BlobDB past RocksDB."""
 from __future__ import annotations
 
-from .common import load_then_run, run_phase, scaled_config
-from repro.core import ParallaxStore
+from .common import open_engine, run_phase, scaled_config
 from repro.core.ycsb import Workload
 
 KEYS = 30_000
@@ -22,9 +21,9 @@ def main(emit) -> None:
         ("parallax", "parallax", True),
     ]:
         cfg = scaled_config(mode, dataset_keys=KEYS, auto_gc=auto_gc, avg_kv_bytes=33)
-        store = ParallaxStore(cfg)
+        engine = open_engine(cfg)
         w = Workload("load_a", "S", num_keys=KEYS, num_ops=0)
-        res = run_phase("fig1:small_load", system, store, w.load_ops())
+        res = run_phase("fig1:small_load", system, engine, w.load_ops())
         results[system] = res.amplification
         emit(res.row())
     # paper claims: blobdb_gc > rocksdb > blobdb_nogc; >13x gap with/without GC

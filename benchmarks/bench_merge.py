@@ -3,10 +3,8 @@
 growth factor 4 — the paper's stress setup for the transient log."""
 from __future__ import annotations
 
-from .common import load_then_run, scaled_config
-from repro.core import ParallaxStore
+from .common import open_engine, run_phase, scaled_config, tagged
 from repro.core.ycsb import Workload
-from .common import run_phase
 
 KEYS = 25_000
 
@@ -16,14 +14,15 @@ def one(emit, name: str, *, merge_depth: int, sorted_segments: bool, mode: str =
         mode, growth_factor=4, dataset_keys=KEYS, avg_kv_bytes=128,
         merge_depth=merge_depth, sorted_segments=sorted_segments,
     )
-    store = ParallaxStore(cfg)
+    engine = open_engine(cfg)
     w = Workload("load_a", "M", num_keys=KEYS, num_ops=0)
-    res = run_phase(f"fig8:{name}", name, store, w.load_ops())
+    res = run_phase(f"fig8:{name}", name, engine, w.load_ops())
     emit(res.row())
     # space amplification: transient-log live bytes over dataset
-    space = store.space_bytes()
+    space = engine.space_bytes()
     dataset = KEYS * (24 + 104)
-    emit(f"fig8:{name}/space,0,space_amp={space/dataset:.2f};medium_segments={len(store.medium_log.segments)}")
+    emit(f"{tagged(f'fig8:{name}/space', engine)},0,"
+         f"space_amp={space/dataset:.2f};medium_segments={len(engine.store.medium_log.segments)}")
     return res.amplification
 
 

@@ -33,23 +33,30 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from .common import AVG_KV, C_BYTE, C_GC_LOOKUP, C_MERGE, C_OP, C_PROBE, CLOCK_HZ, scaled_config
+import itertools
+
+import repro.api as api
+from .common import AVG_KV, C_BYTE, C_GC_LOOKUP, C_MERGE, C_OP, C_PROBE, CLOCK_HZ, open_engine, scaled_config
 from .common import run_async_claim
-from repro.core import RangeShardedStore, ShardedStore
-from repro.core.ycsb import Workload, execute, make_key
+from repro.core.ycsb import Workload, make_key, payload
 
 MIX = "SD"
 RUNS = ("run_c", "run_e")
 BATCH = 64
 
 
-def run_front_phase(name: str, store, ops, batch: int = BATCH) -> dict:
-    """One workload phase against a sharded front-end; topology may change."""
+def range_part(sample, n, **kw) -> api.PartitioningConfig:
+    return api.PartitioningConfig.range_for_keys(sample, n, **kw)
+
+
+def run_front_phase(name: str, engine: api.Engine, ops, batch: int = BATCH) -> dict:
+    """One workload phase against a sharded engine; topology may change."""
+    store = engine.store
     t0 = time.time()
     dev0 = store.device_stats()
     agg0 = store.aggregate_stats()
     scans0, probes0 = store.scans, store.scan_probes
-    counts = execute(store, ops, batch_size=batch)
+    counts = api.execute(engine, ops, batch_size=batch)
     nops = sum(counts.values())
     dev = store.device_stats().delta(dev0)
     agg = store.aggregate_stats()
@@ -76,13 +83,14 @@ def run_front_phase(name: str, store, ops, batch: int = BATCH) -> dict:
         "probes_per_scan": (store.scan_probes - probes0) / max(scans, 1),
         "shards": store.num_shards,
         "wall_s": time.time() - t0,
+        "cfg": engine.config.tag(),
     }
 
 
 def _row(r: dict, system: str) -> str:
     us = 1e6 * r["wall_s"] / max(r["ops"], 1)
     return (
-        f"{r['name']}/{system},{us:.2f},"
+        f"{r['name']}/{system}@{r['cfg']},{us:.2f},"
         f"amp={r['amp']:.2f};kops={r['kops']:.1f};"
         f"scan_probes={r['probes_per_scan']:.2f};shards={r['shards']}"
     )
@@ -106,17 +114,17 @@ def main(emit, smoke: bool = False) -> None:
             bloom_bits_per_key=10,
         )
         fronts = {
-            "hash": ShardedStore(n, cfg),
+            "hash": open_engine(cfg, partitioning=f"hash:{n}"),
             # pre-split on the loaded keyspace; the rebalancer stays live so
             # run-phase skew can still move boundaries
-            "range": RangeShardedStore.for_keys(sample, n, cfg),
+            "range": open_engine(cfg, partitioning=range_part(sample, n)),
         }
-        for system, store in fronts.items():
+        for system, engine in fronts.items():
             tag = f"{system}-x{n}"
-            emit(_row(run_front_phase(f"range:{tag}:load_e", store, load_w.load_ops()), tag))
+            emit(_row(run_front_phase(f"range:{tag}:load_e", engine, load_w.load_ops()), tag))
             for run_kind in RUNS:
                 w = Workload(run_kind, MIX, num_keys=keys, num_ops=num_ops)
-                r = run_front_phase(f"range:{tag}:{run_kind}", store, w.run_ops())
+                r = run_front_phase(f"range:{tag}:{run_kind}", engine, w.run_ops())
                 emit(_row(r, tag))
                 probes[(system, n, run_kind)] = r["probes_per_scan"]
 
@@ -126,7 +134,7 @@ def main(emit, smoke: bool = False) -> None:
         mid = make_key(keys // 2)
         assert h.scan(mid, 40) == rg.scan(mid, 40), n
         some = [make_key(i) for i in range(0, keys, max(1, keys // 50))]
-        assert h.get_many(some) == rg.get_many(some), n
+        assert [h.get(k) for k in some] == [rg.get(k) for k in some], n
 
     # claim 1 (acceptance): hash scans fan out to every shard; range scans
     # probe only the range-overlapping shards — strictly fewer at equal count
@@ -146,16 +154,16 @@ def main(emit, smoke: bool = False) -> None:
     # tick, and metadata-WAL amplification accounting
     def split_profile(batch_keys: int):
         cfgm = dataclasses.replace(base_cfg, bloom_bits_per_key=10)
-        stm = RangeShardedStore.for_keys(
-            sample, 2, cfgm, auto_rebalance=False, migration_batch_keys=batch_keys
-        )
-        execute(stm, load_w.load_ops(), batch_size=BATCH)
-        stm.flush_all()
+        eng = open_engine(cfgm, partitioning=range_part(
+            sample, 2, auto_rebalance=False, migration_batch_keys=batch_keys))
+        api.execute(eng, load_w.load_ops(), batch_size=BATCH)
+        stm = eng.store
+        eng.flush_all()
         stm.split(0, background=True)
         tick_bytes = []
         while stm.migration is not None:
             before = stm.device_stats().total
-            stm.migration_tick()
+            eng.migration_tick()
             tick_bytes.append(stm.device_stats().total - before)
         return stm, tick_bytes
 
@@ -191,28 +199,32 @@ def main(emit, smoke: bool = False) -> None:
         bloom_bits_per_key=10,
     )
 
-    def make_async_store() -> RangeShardedStore:
+    def make_async_engine(execution: api.ExecutionConfig) -> api.Engine:
         # a static balanced topology: the paced comparison measures execution
         # overlap, not rebalancing (bench claims 2/4 cover the policy)
-        st = RangeShardedStore.for_keys(sample, async_n, async_cfg, auto_rebalance=False)
-        execute(st, load_w.load_ops(), batch_size=BATCH)
-        return st
+        eng = open_engine(async_cfg,
+                          partitioning=range_part(sample, async_n, auto_rebalance=False),
+                          execution=execution)
+        api.execute(eng, load_w.load_ops(), batch_size=BATCH)
+        return eng
 
     run_c = lambda: Workload("run_c", MIX, num_keys=keys, num_ops=num_ops).run_ops()
     run_async_claim(emit, "range:async",
                     f"range:async:run_c/range-x{async_n}w{async_workers}",
-                    make_async_store, run_c, workers=async_workers, batch=BATCH)
+                    make_async_engine, run_c, workers=async_workers, batch=BATCH)
 
     # claim 2: the skew-driven splitter adapts a degenerate map — start with
     # uniform byte boundaries (all YCSB keys in one shard) and let run E's
     # zipfian stream drive splits
     cfg = dataclasses.replace(base_cfg, bloom_bits_per_key=10)
-    adaptive = RangeShardedStore(
-        4, cfg, rebalance_window=max(256, num_ops // 8), max_shards=16
-    )
-    execute(adaptive, load_w.load_ops(), batch_size=BATCH)
+    adaptive_eng = open_engine(cfg, partitioning=api.PartitioningConfig(
+        scheme="range", shards=4,
+        rebalance_window=max(256, num_ops // 8), max_shards=16,
+    ))
+    adaptive = adaptive_eng.store
+    api.execute(adaptive_eng, load_w.load_ops(), batch_size=BATCH)
     w = Workload("run_e", MIX, num_keys=keys, num_ops=num_ops)
-    execute(adaptive, w.run_ops(), batch_size=BATCH)
+    api.execute(adaptive_eng, w.run_ops(), batch_size=BATCH)
     populated = sum(
         1 for i, s in enumerate(adaptive.shards) if s.live_keys_in(*adaptive.bounds(i))
     )
@@ -222,4 +234,52 @@ def main(emit, smoke: bool = False) -> None:
         f"range/adaptive,0,splits={adaptive.splits};merges={adaptive.merges};"
         f"migrated={adaptive.migrated_keys};shards={adaptive.num_shards};"
         f"populated={populated}"
+    )
+
+    # claim 6 (PR 5): the lazy iterator serves run E's scans without
+    # regressing the eager path — identical rows, probes/op and device time
+    # no worse (the cursor pulls exactly the rows the scan returns, shard by
+    # shard, instead of materializing per-shard lists)
+    iter_part = range_part(sample, 4, auto_rebalance=False)
+    iter_cfg = dataclasses.replace(base_cfg, bloom_bits_per_key=10)
+    engines = {}
+    for variant in ("eager", "iter"):
+        eng = open_engine(iter_cfg, partitioning=iter_part)
+        api.execute(eng, load_w.load_ops(), batch_size=BATCH)
+        engines[variant] = eng
+    scan_w = Workload("run_e", MIX, num_keys=keys, num_ops=min(num_ops, 400))
+    results = {v: [] for v in engines}
+    stats = {}
+    for variant, eng in engines.items():
+        store = eng.store
+        dev0 = store.device_stats()
+        # the Device model's own bandwidths turn bytes into time (topology is
+        # static here, so the per-store sum delta is well-defined)
+        time0 = store.device_time("serial")
+        scans0, probes0 = store.scans, store.scan_probes
+        for op in scan_w.run_ops():
+            if op.kind == "insert":
+                eng.put(op.key, payload(op.value_size))
+            elif variant == "eager":
+                results[variant].append(eng.scan(op.key, op.scan_len))
+            else:
+                cursor = eng.iterator(op.key)
+                results[variant].append(
+                    list(itertools.islice(iter(cursor), op.scan_len)))
+        dev = store.device_stats().delta(dev0)
+        stats[variant] = {
+            "probes_per_scan": (store.scan_probes - probes0) / max(store.scans - scans0, 1),
+            "dev_time": store.device_time("serial") - time0,
+            "dev_bytes": dev.total,
+        }
+    assert results["iter"] == results["eager"], "iterator rows diverge from eager scan"
+    assert stats["iter"]["probes_per_scan"] <= stats["eager"]["probes_per_scan"], stats
+    assert stats["iter"]["dev_time"] <= stats["eager"]["dev_time"] * 1.0001, stats
+    emit(
+        f"range:iter_vs_scan:run_e/range-x4@{engines['iter'].config.tag()},0,"
+        f"iter_probes={stats['iter']['probes_per_scan']:.2f};"
+        f"eager_probes={stats['eager']['probes_per_scan']:.2f};"
+        f"iter_dev_us={stats['iter']['dev_time'] * 1e6:.1f};"
+        f"eager_dev_us={stats['eager']['dev_time'] * 1e6:.1f};"
+        f"iter_dev_bytes={stats['iter']['dev_bytes']}"
     )

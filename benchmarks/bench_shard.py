@@ -19,10 +19,10 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from .common import AVG_KV, C_BYTE, C_GC_LOOKUP, C_MERGE, C_OP, C_PROBE, CLOCK_HZ, run_phase, scaled_config
+import repro.api as api
+from .common import AVG_KV, C_BYTE, C_GC_LOOKUP, C_MERGE, C_OP, C_PROBE, CLOCK_HZ, open_engine, run_phase, scaled_config
 from .common import run_async_claim
-from repro.core import ParallaxStore, ShardedStore
-from repro.core.ycsb import Workload, execute, make_key
+from repro.core.ycsb import Workload, make_key
 
 MIX = "SD"
 # run E makes the hash-shard scan fan-out cost visible: every scan must probe
@@ -32,7 +32,7 @@ RUNS = ("run_a", "run_b", "run_c", "run_e")
 BATCH = 64
 
 
-def _reset_op_counters(store: ShardedStore) -> None:
+def _reset_op_counters(store) -> None:
     for s in store.shards:
         s.stats.index_probes = 0
         s.stats.bloom_skips = 0
@@ -40,12 +40,13 @@ def _reset_op_counters(store: ShardedStore) -> None:
         s.stats.gc_lookups = 0
 
 
-def run_sharded_phase(name: str, store: ShardedStore, ops, batch: int = BATCH) -> dict:
+def run_sharded_phase(name: str, engine: api.Engine, ops, batch: int = BATCH) -> dict:
+    store = engine.store
     t0 = time.time()
     snaps = [s.device.stats.snapshot() for s in store.shards]
     app0 = sum(s.stats.app_bytes for s in store.shards)
     _reset_op_counters(store)
-    counts = execute(store, ops, batch_size=batch)
+    counts = api.execute(engine, ops, batch_size=batch)
     nops = sum(counts.values())
     deltas = [s.device.stats.delta(sn) for s, sn in zip(store.shards, snaps)]
     total_bytes = sum(d.total for d in deltas)
@@ -68,13 +69,14 @@ def run_sharded_phase(name: str, store: ShardedStore, ops, batch: int = BATCH) -
         "probes_per_op": agg.index_probes / max(nops, 1),
         "bloom_skips": agg.bloom_skips,
         "wall_s": time.time() - t0,
+        "cfg": engine.config.tag(),
     }
 
 
 def _row(r: dict, shards: int, bloom: bool) -> str:
     us = 1e6 * r["wall_s"] / max(r["ops"], 1)
     return (
-        f"{r['name']}/parallax-x{shards}{'+bloom' if bloom else ''},{us:.2f},"
+        f"{r['name']}/parallax-x{shards}{'+bloom' if bloom else ''}@{r['cfg']},{us:.2f},"
         f"amp={r['amp']:.2f};kops={r['kops']:.1f};"
         f"probes_op={r['probes_per_op']:.2f};bloom_skips={r['bloom_skips']}"
     )
@@ -90,14 +92,14 @@ def main(emit, smoke: bool = False) -> None:
 
     # seed-style baseline: one store, blooms off, per-op execute
     seed_cfg = dataclasses.replace(base_cfg, bloom_bits_per_key=0)
-    seed = ParallaxStore(seed_cfg)
+    seed = open_engine(seed_cfg)
     load_w = Workload("load_a", MIX, num_keys=keys, num_ops=0)
     emit(run_phase("shard:seed:load_a", "parallax-seed", seed, load_w.load_ops()).row())
     seed_probes: dict[str, float] = {}
     for run_kind in RUNS:
         w = Workload(run_kind, MIX, num_keys=keys, num_ops=num_ops)
         res = run_phase(f"shard:seed:{run_kind}", "parallax-seed", seed, w.run_ops())
-        seed_probes[run_kind] = seed.stats.index_probes / max(res.ops, 1)
+        seed_probes[run_kind] = seed.store.stats.index_probes / max(res.ops, 1)
         emit(res.row())
 
     probes_run_c: dict[tuple[bool, int], float] = {}
@@ -113,13 +115,13 @@ def main(emit, smoke: bool = False) -> None:
                 cache_bytes=base_cfg.cache_bytes // n,
                 bloom_bits_per_key=10 if bloom else 0,
             )
-            store = ShardedStore(n, cfg)
+            engine = open_engine(cfg, partitioning=f"hash:{n}")
             tag = f"x{n}{'b' if bloom else ''}"
-            r = run_sharded_phase(f"shard:{tag}:load_a", store, load_w.load_ops())
+            r = run_sharded_phase(f"shard:{tag}:load_a", engine, load_w.load_ops())
             emit(_row(r, n, bloom))
             for run_kind in RUNS:
                 w = Workload(run_kind, MIX, num_keys=keys, num_ops=num_ops)
-                r = run_sharded_phase(f"shard:{tag}:{run_kind}", store, w.run_ops())
+                r = run_sharded_phase(f"shard:{tag}:{run_kind}", engine, w.run_ops())
                 emit(_row(r, n, bloom))
                 if run_kind == "run_c":
                     probes_run_c[(bloom, n)] = r["probes_per_op"]
@@ -153,23 +155,24 @@ def main(emit, smoke: bool = False) -> None:
         bloom_bits_per_key=10,
     )
 
-    def make_async_store() -> ShardedStore:
-        st = ShardedStore(async_n, async_cfg)
-        execute(st, load_w.load_ops(), batch_size=BATCH)
-        return st
+    def make_async_engine(execution: api.ExecutionConfig) -> api.Engine:
+        eng = open_engine(async_cfg, partitioning=f"hash:{async_n}", execution=execution)
+        api.execute(eng, load_w.load_ops(), batch_size=BATCH)
+        return eng
 
     run_c = lambda: Workload("run_c", MIX, num_keys=keys, num_ops=num_ops).run_ops()
     run_async_claim(emit, "shard:async",
                     f"shard:async:run_c/parallax-x{async_n}w{async_workers}",
-                    make_async_store, run_c, workers=async_workers, batch=BATCH)
+                    make_async_engine, run_c, workers=async_workers, batch=BATCH)
 
     # claim 2: a 1-shard bloom-filtered front-end is indistinguishable from the
     # bare filterless store (routing + batching + filters change no results)
-    bare = ParallaxStore(dataclasses.replace(base_cfg, bloom_bits_per_key=0))
-    front = ShardedStore(1, dataclasses.replace(base_cfg, bloom_bits_per_key=10))
-    execute(bare, load_w.load_ops())
-    execute(front, load_w.load_ops(), batch_size=BATCH)
+    bare = open_engine(dataclasses.replace(base_cfg, bloom_bits_per_key=0))
+    front = open_engine(dataclasses.replace(base_cfg, bloom_bits_per_key=10),
+                        partitioning="hash:1")
+    api.execute(bare, load_w.load_ops())
+    api.execute(front, load_w.load_ops(), batch_size=BATCH)
     probe_keys = [make_key(i) for i in range(keys + 10)]
-    assert front.get_many(probe_keys) == [bare.get(k) for k in probe_keys]
+    assert [front.get(k) for k in probe_keys] == [bare.get(k) for k in probe_keys]
     assert front.scan(b"", keys + 10) == bare.scan(b"", keys + 10)
     emit(f"shard/claims,0,n1_equivalent_to_bare_store=true;keys={keys}")

@@ -5,8 +5,7 @@ Run E (scans) is the separation-hostile workload: expect RocksDB > Parallax
 ~40% of RocksDB while BlobDB is ~8x off)."""
 from __future__ import annotations
 
-from .common import load_then_run, run_phase, scaled_config
-from repro.core import ParallaxStore
+from .common import open_engine, run_phase, scaled_config
 from repro.core.ycsb import Workload
 
 SYSTEMS = ["parallax", "rocksdb", "blobdb"]
@@ -26,19 +25,19 @@ def main(emit, smoke: bool = False) -> None:
             from .common import AVG_KV
 
             cfg = scaled_config(system, dataset_keys=keys, avg_kv_bytes=AVG_KV[mix])
-            store = ParallaxStore(cfg)
+            engine = open_engine(cfg)
             load = run_phase(
-                f"fig5:{mix}:load_a", system, store,
+                f"fig5:{mix}:load_a", system, engine,
                 Workload("load_a", mix, num_keys=keys, num_ops=0).load_ops(),
             )
             emit(load.row())
             for run_kind in RUNS:
                 w = Workload(run_kind, mix, num_keys=keys, num_ops=keys // 4)
-                res = run_phase(f"fig5:{mix}:{run_kind}", system, store, w.run_ops())
+                res = run_phase(f"fig5:{mix}:{run_kind}", system, engine, w.run_ops())
                 emit(res.row())
             # Run E: scan-heavy
             w = Workload("run_e", mix, num_keys=keys, num_ops=scan_ops)
-            res = run_phase(f"fig5:{mix}:run_e", system, store, w.run_ops())
+            res = run_phase(f"fig5:{mix}:run_e", system, engine, w.run_ops())
             emit(res.row())
             if mix == "SD":
                 scan_kops[system] = res.kops

@@ -7,6 +7,13 @@ keyspaces by scaling L0 (128 MB -> 32 KB), segments (2 MB -> 128 KB), cache
 (Table 1 ratios preserved: ~18-40%% of dataset) and log chunks together, so
 the LSM has the same number of levels (3-4) as the paper's datasets.
 
+All benchmarks drive stores through :mod:`repro.api` engines (PR 5): helpers
+take/construct an :class:`repro.api.Engine`, and every per-engine row carries
+the engine-config tag (``EngineConfig.tag()``) after ``@`` in its row id —
+``scripts/check_bench.py`` keys baseline rows on the full id, so config
+changes rename rows (a loud baseline diff) instead of silently shifting
+numbers under an unchanged name.
+
 Metrics:
 * amplification  — device traffic / application traffic (the paper's metric)
 * kops           — ops / simulated device time (P4800X bandwidths); a device-
@@ -18,8 +25,9 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import repro.api as api
 from repro.core import ParallaxStore, StoreConfig, overlap_time
-from repro.core.ycsb import Workload, execute, execute_async
+from repro.core.ycsb import Workload
 
 # modeled CPU constants (cycles); see module docstring
 C_OP = 2_000          # per user op (parse, memtable, WAL append)
@@ -56,6 +64,16 @@ def scaled_config(mode: str, *, growth_factor: int = 4, dataset_keys: int = 20_0
     )
 
 
+def open_engine(store_config: StoreConfig, **engine_kw) -> api.Engine:
+    """One-liner for the benches: an engine over a scaled store config."""
+    return api.open(api.EngineConfig(store=store_config, **engine_kw))
+
+
+def tagged(name: str, engine: api.Engine) -> str:
+    """Row id carrying the engine-config tag (see module docstring)."""
+    return f"{name}@{engine.config.tag()}"
+
+
 @dataclasses.dataclass
 class BenchResult:
     name: str
@@ -65,12 +83,16 @@ class BenchResult:
     kops: float
     kcycles_per_op: float
     wall_s: float
+    cfg: str = ""
     extra: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> str:
         us_per_call = 1e6 * self.wall_s / max(self.ops, 1)
+        ident = f"{self.name}/{self.system}"
+        if self.cfg:
+            ident = f"{ident}@{self.cfg}"
         return (
-            f"{self.name}/{self.system},{us_per_call:.2f},"
+            f"{ident},{us_per_call:.2f},"
             f"amp={self.amplification:.2f};kops={self.kops:.1f};"
             f"kcyc_op={self.kcycles_per_op:.1f}"
         )
@@ -96,7 +118,10 @@ def metrics(store: ParallaxStore, ops: int, *, since=None, app_since: int = 0,
     return amp, kops, kcyc
 
 
-def run_phase(name: str, system: str, store: ParallaxStore, workload_ops, ops_count_hint=None) -> BenchResult:
+def run_phase(name: str, system: str, engine: api.Engine, workload_ops,
+              ops_count_hint=None) -> BenchResult:
+    """One workload phase through a none-partitioned engine (bare store)."""
+    store = engine.store
     t0 = time.time()
     since = store.device.stats.snapshot()
     app0 = store.stats.app_bytes
@@ -104,35 +129,38 @@ def run_phase(name: str, system: str, store: ParallaxStore, workload_ops, ops_co
     store.stats.index_probes = 0
     store.stats.entries_merged = 0
     store.stats.gc_lookups = 0
-    counts = execute(store, workload_ops)
+    counts = api.execute(engine, workload_ops)
     ops = sum(counts.values())
     amp, kops, kcyc = metrics(store, ops, since=since, app_since=app0)
-    return BenchResult(name, system, ops, amp, kops, kcyc, time.time() - t0)
+    return BenchResult(name, system, ops, amp, kops, kcyc, time.time() - t0,
+                       cfg=engine.config.tag())
 
 
-def async_speedup_phase(make_store, run_ops_factory, *, workers: int = 4,
+def async_speedup_phase(make_engine, run_ops_factory, *, workers: int = 4,
                         batch: int = 64, target_serial_s: float = 0.8) -> dict:
     """Measured wall-clock of the async engine vs its 1-worker serialization,
     against the modeled overlap policies, on one workload phase.
 
-    ``make_store`` must build an identically-loaded sharded store each call
-    (three are built: a model probe plus the two paced runs).  The probe runs
-    the phase on the plain serial path and yields per-shard device-time
-    deltas, from which the ``serial`` / ``channels:k`` / ``ideal`` policy
-    times are modeled (:func:`repro.core.io.overlap_time`) and the pace is
-    chosen so the paced 1-worker run sleeps ~``target_serial_s`` — the GIL
-    makes *CPU* overlap impossible, so wall-clock comparisons are meaningful
-    exactly for the paced device time (see docs/execution.md).  Both paced
-    runs must finish with byte-identical per-shard device stats (pacing and
-    threading change no state — the executor's core claim).
+    ``make_engine(execution)`` must build an identically-loaded engine for the
+    given :class:`repro.api.ExecutionConfig` each call (three are built: a
+    serial model probe plus the two paced async runs).  The probe runs the
+    phase on the plain serial path and yields per-shard device-time deltas,
+    from which the ``serial`` / ``channels:k`` / ``ideal`` policy times are
+    modeled (:func:`repro.core.io.overlap_time`) and the pace is chosen so
+    the paced 1-worker run sleeps ~``target_serial_s`` — the GIL makes *CPU*
+    overlap impossible, so wall-clock comparisons are meaningful exactly for
+    the paced device time (see docs/execution.md).  Both paced runs must
+    finish with byte-identical per-shard device stats (pacing and threading
+    change no state — the executor's core claim).
 
     Returns ``model`` (policy -> modeled seconds), ``walls`` (workers ->
     measured seconds), ``speedup`` (1-worker wall / k-worker wall), ``pace``.
     """
-    probe = make_store()
-    before = probe.device_times()
-    execute(probe, run_ops_factory(), batch_size=batch)
-    after = probe.device_times()
+    probe = make_engine(api.ExecutionConfig(mode="serial"))
+    before = probe.store.device_times()
+    api.execute(probe, run_ops_factory(), batch_size=batch)
+    after = probe.store.device_times()
+    probe.close()
     # per-store deltas are positional: a topology change mid-phase (a range
     # store with its rebalancer live) would misalign them silently — callers
     # must measure on a static topology (hash, or auto_rebalance=False)
@@ -146,19 +174,24 @@ def async_speedup_phase(make_store, run_ops_factory, *, workers: int = 4,
     pace = target_serial_s / max(model["serial"], 1e-9)
     walls: dict[int, float] = {}
     fleets: dict[int, list] = {}
+    tag = ""
     for w, pipelined in ((1, False), (workers, True)):
-        store = make_store()
+        engine = make_engine(api.ExecutionConfig(
+            mode="async", workers=w, pipeline=pipelined, pace=pace))
         t0 = time.time()
-        execute_async(store, run_ops_factory(), batch_size=batch, workers=w,
-                      pipeline=pipelined, pace=pace)
+        api.execute(engine, run_ops_factory(), batch_size=batch)
         walls[w] = time.time() - t0
-        fleets[w] = [dataclasses.asdict(s.device.stats) for s in store._all_stores()]
+        fleets[w] = [dataclasses.asdict(s.device.stats)
+                     for s in engine.store._all_stores()]
+        tag = engine.config.tag()  # last iteration: the nominal k-worker config
+        engine.close()
     assert fleets[1] == fleets[workers], "pacing/threading must not change device traffic"
     return {
         "model": model,
         "walls": walls,
         "speedup": walls[1] / max(walls[workers], 1e-9),
         "pace": pace,
+        "tag": tag,
     }
 
 
@@ -177,18 +210,20 @@ def async_speedup_row(name: str, r: dict, workers: int) -> str:
     )
 
 
-def run_async_claim(emit, prefix: str, row_name: str, make_store, run_ops_factory,
+def run_async_claim(emit, prefix: str, row_name: str, make_engine, run_ops_factory,
                     *, workers: int = 4, batch: int = 64,
                     target_serial_s: float = 2.0) -> dict:
     """The PR 4 async acceptance claim, shared by bench_shard/bench_range:
     measure the paced speedup phase, emit the model-vs-measured row and the
     gate status row, and assert the >=2x wall-clock claim (when meaningful)
     plus the model ladder.  One call site per bench keeps the two benches'
-    acceptance criteria identical by construction."""
-    r = async_speedup_phase(make_store, run_ops_factory, workers=workers,
+    acceptance criteria identical by construction.  ``make_engine`` is the
+    :func:`async_speedup_phase` engine factory; the emitted ids carry the
+    nominal async config tag."""
+    r = async_speedup_phase(make_engine, run_ops_factory, workers=workers,
                             batch=batch, target_serial_s=target_serial_s)
-    emit(async_speedup_row(row_name, r, workers))
-    emit_speedup_gate(emit, prefix, r, workers, target_serial_s)
+    emit(async_speedup_row(f"{row_name}@{r['tag']}", r, workers))
+    emit_speedup_gate(emit, f"{prefix}@{r['tag']}", r, workers, target_serial_s)
     return r
 
 
@@ -217,14 +252,14 @@ def emit_speedup_gate(emit, prefix: str, r: dict, workers: int,
 
 def load_then_run(name: str, mode: str, mix: str, *, num_keys: int, num_ops: int,
                   run_kind: str = "run_a", cfg_kw: dict | None = None,
-                  config: StoreConfig | None = None, seed: int = 7) -> tuple[BenchResult, BenchResult, ParallaxStore]:
+                  config: StoreConfig | None = None, seed: int = 7) -> tuple[BenchResult, BenchResult, api.Engine]:
     kw = dict(cfg_kw or {})
     kw.setdefault("avg_kv_bytes", AVG_KV.get(mix, 250))
     kw.setdefault("dataset_keys", num_keys)
     cfg = config or scaled_config(mode, **kw)
-    store = ParallaxStore(cfg)
+    engine = open_engine(cfg)
     w = Workload("load_a", mix, num_keys=num_keys, num_ops=0, seed=seed)
-    load_res = run_phase(f"{name}:load_a", mode, store, w.load_ops())
+    load_res = run_phase(f"{name}:load_a", mode, engine, w.load_ops())
     r = Workload(run_kind, mix, num_keys=num_keys, num_ops=num_ops, seed=seed)
-    run_res = run_phase(f"{name}:{run_kind}", mode, store, r.run_ops())
-    return load_res, run_res, store
+    run_res = run_phase(f"{name}:{run_kind}", mode, engine, r.run_ops())
+    return load_res, run_res, engine

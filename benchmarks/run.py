@@ -115,12 +115,21 @@ def main() -> None:
             traceback.print_exc()
             emit(f"bench:{name}/total,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}")
     if json_out:
+        def row_dict(row: str) -> dict:
+            d = dict(zip(("name", "us_per_call", "derived"), row.split(",", 2)))
+            # PR 5: per-engine rows carry the engine-config tag after '@' in
+            # their id (EngineConfig.tag(), e.g. "hash4+serial"); surface it
+            # as its own field so baseline diffs can key on configuration
+            # without parsing row names.  Gate rows append ':gate' after the
+            # tag ('<prefix>@<tag>:gate') — tags never contain ':', so the
+            # suffix is split back off here.
+            name = d["name"]
+            d["engine"] = name.split("@", 1)[1].split(":", 1)[0] if "@" in name else ""
+            return d
+
         payload = {
             "smoke": smoke,
-            "rows": [
-                dict(zip(("name", "us_per_call", "derived"), row.split(",", 2)))
-                for row in rows
-            ],
+            "rows": [row_dict(row) for row in rows],
             "failures": [name for name, _ in failures],
         }
         with open(json_out, "w") as f:

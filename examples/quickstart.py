@@ -8,9 +8,10 @@
 import jax
 import jax.numpy as jnp
 
+import repro.api as api
 from repro.configs import ARCHS
-from repro.core import ParallaxStore, StoreConfig
-from repro.core.ycsb import Workload, execute
+from repro.core import StoreConfig
+from repro.core.ycsb import Workload
 from repro.data.pipeline import DataConfig, host_batch
 from repro.models import get_model
 from repro.optim import adamw
@@ -20,14 +21,15 @@ from repro.train.step import make_train_fn
 def kv_store_demo() -> None:
     print("=== Parallax hybrid KV placement vs baselines (SD mix, scaled) ===")
     for mode in ("parallax", "rocksdb", "blobdb"):
-        st = ParallaxStore(StoreConfig(
+        cfg = api.EngineConfig(store=StoreConfig(
             mode=mode, l0_capacity=1 << 14, growth_factor=4,
             cache_bytes=1 << 17, segment_bytes=1 << 17, chunk_bytes=1 << 13,
         ))
-        execute(st, Workload("load_a", "SD", num_keys=4000, num_ops=0).load_ops())
-        execute(st, Workload("run_a", "SD", num_keys=4000, num_ops=2000).run_ops())
-        print(f"  {mode:9s} I/O amplification = {st.amplification():6.2f} "
-              f"(levels={[len(l) for l in st.levels]})")
+        with api.open(cfg) as db:
+            api.execute(db, Workload("load_a", "SD", num_keys=4000, num_ops=0).load_ops())
+            api.execute(db, Workload("run_a", "SD", num_keys=4000, num_ops=2000).run_ops())
+            print(f"  {mode:9s} I/O amplification = {db.amplification():6.2f} "
+                  f"(levels={[len(l) for l in db.store.levels]})")
 
 
 def train_demo() -> None:

@@ -18,7 +18,11 @@ against the current run:
   times) are deterministic byte-accounting and *are* gated;
 * rows present only in the current run warn (new benches don't fail the gate;
   refresh the baseline to start gating them:
-  ``PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_BASELINE.json``).
+  ``PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_BASELINE.json``);
+* per-engine rows are keyed on their full id including the engine-config tag
+  after ``@`` (``repro.api.EngineConfig.tag()``, e.g. ``...@hash4+serial``) —
+  an engine-config change renames the row and fails loudly as missing+new
+  instead of silently gating different configurations against each other.
 
 The default tolerance is intentionally generous (the ISSUE's "stop the perf
 trajectory being empty" gate, not a bit-exactness oracle — tighten once the
@@ -66,7 +70,9 @@ def index_rows(payload: dict) -> dict[tuple[str, int], dict]:
 
 def is_informational(name: str) -> bool:
     """Rows whose presence/values are host-load-dependent, never gated: the
-    benches' ``*:async:gate`` status rows (speedup applied vs skipped)."""
+    benches' ``*:gate`` status rows (speedup applied vs skipped).  Gate ids
+    put ``:gate`` after the engine-config tag (``<prefix>@<tag>:gate``), so
+    the full-id suffix check covers tagged and untagged forms alike."""
     return name.endswith(":gate")
 
 

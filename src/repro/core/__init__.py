@@ -1,5 +1,11 @@
 """Parallax core: hybrid KV placement in an LSM store (the paper's contribution).
 
+New call-sites should open these building blocks through the unified engine
+API — :func:`repro.api.open` with a declarative :class:`repro.api.EngineConfig`
+composing placement, partitioning and execution (see ``docs/api.md``); the
+classes below remain public as the engine's substrate and for
+maintenance/test surfaces.
+
 Public surface:
 
 * :mod:`repro.core.model` — the paper's I/O-amplification model (Eq. 1-4, R(i))

@@ -160,8 +160,8 @@ class RangeShardedStore(BaseShardedStore):
         )
         self._window_base = self._op_counts()
 
-    @classmethod
-    def for_keys(cls, keys, num_shards: int, config: StoreConfig | None = None, **kw) -> "RangeShardedStore":
+    @staticmethod
+    def boundaries_for_keys(keys, num_shards: int) -> list[bytes]:
         """Balanced boundaries from a key sample (equal-population quantiles)."""
         ks = sorted(set(keys))
         bounds = [b""]
@@ -169,7 +169,12 @@ class RangeShardedStore(BaseShardedStore):
             b = ks[len(ks) * i // num_shards]
             if b > bounds[-1]:
                 bounds.append(b)
-        return cls(config=config, boundaries=bounds, **kw)
+        return bounds
+
+    @classmethod
+    def for_keys(cls, keys, num_shards: int, config: StoreConfig | None = None, **kw) -> "RangeShardedStore":
+        """Pre-split on a key sample: see :meth:`boundaries_for_keys`."""
+        return cls(config=config, boundaries=cls.boundaries_for_keys(keys, num_shards), **kw)
 
     # ---------------------------------------------------------------- routing
     def shard_of(self, key: bytes) -> int:
@@ -245,6 +250,39 @@ class RangeShardedStore(BaseShardedStore):
             i += 1
         self._after_batch()  # scans feed the skew window like batched ops
         return out
+
+    def iter_rows(self, start: bytes = b""):
+        """Lazy range-local row stream: shards stream one at a time in
+        boundary order (their output is already globally sorted), each pulled
+        on demand, so rows never consumed are never read or charged.  A shard
+        that is the destination of an in-flight migration is served through
+        the eager merged view (:meth:`_shard_rows` — the double-routed
+        resolution needs both sides' whole pending window); every other shard
+        streams through :meth:`ParallaxStore.iter_range` clipped to its owned
+        range.  Probe accounting matches ``scan``: one ``scan_probes`` per
+        shard entered (plus the draining source, inside ``_shard_rows``) —
+        shards the consumer never reaches are never probed.
+        """
+        self.scans += 1
+        return self._iter_rows(start)
+
+    def _iter_rows(self, start: bytes):
+        i = self.shard_of(start)
+        while i < len(self.shards):
+            self.scan_probes += 1
+            lo, hi = self.bounds(i)
+            first = max(start, lo)
+            m = self._migration
+            if m is not None and self._shard_ids[i] == m.dst_id:
+                for key, value in self._shard_rows(i, first, 1 << 62):
+                    if hi is not None and key >= hi:
+                        break
+                    yield (key, value)
+            else:
+                # clipping at hi keeps stale post-bound residue from a crashed
+                # migration invisible, exactly like scan's per-shard clip
+                yield from self.shards[i].iter_range(first, hi)
+            i += 1
 
     def _shard_rows(self, i: int, start: bytes, need: int) -> list[tuple[bytes, bytes]]:
         """Up to ``need`` sorted live rows of shard ``i`` from ``start``,

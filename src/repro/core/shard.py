@@ -40,7 +40,7 @@ import heapq
 import itertools
 import threading
 import zlib
-from typing import Iterable, Sequence
+from typing import Iterable, Iterator, Sequence
 
 from .io import DeviceStats, overlap_time
 from .store import ParallaxStore, StoreConfig, StoreStats
@@ -185,6 +185,18 @@ class BaseShardedStore:
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         raise NotImplementedError
 
+    def iter_rows(self, start: bytes = b"") -> Iterator[tuple[bytes, bytes]]:
+        """Lazy global sorted row stream from ``start`` (no count bound).
+
+        The cursor behind :class:`repro.api.Iterator`: rows are produced — and
+        their device bytes charged — on demand, unlike :meth:`scan`, which
+        materializes ``count`` rows per consulted shard up front.  Valid only
+        while the store is not written to and the topology does not change;
+        mutate, then take a fresh iterator.  Unlike ``scan``, iteration never
+        runs the per-batch policy hook.
+        """
+        raise NotImplementedError
+
     # ------------------------------------------------------------ maintenance
     def gc_tick(self, force: bool = False) -> int:
         n = sum(s.gc_tick(force=force) for s in self._all_stores())
@@ -280,3 +292,15 @@ class ShardedStore(BaseShardedStore):
         self.scan_probes += len(self.shards)
         per_shard = [s.scan(start, count) for s in self.shards]
         return list(itertools.islice(heapq.merge(*per_shard), count))
+
+    def iter_rows(self, start: bytes = b"") -> Iterator[tuple[bytes, bytes]]:
+        """Incremental k-way merge of per-shard lazy streams.
+
+        Every shard must still be consulted (hash routing has no key
+        locality), but each contributes rows on demand: pulling ``k`` rows
+        costs ~``k`` row reads plus one buffered lookahead row per shard,
+        where the eager :meth:`scan` pays ``count`` rows on *every* shard.
+        """
+        self.scans += 1
+        self.scan_probes += len(self.shards)
+        return heapq.merge(*(s.iter_range(start) for s in self.shards))

@@ -48,8 +48,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 import zlib
-from typing import Iterable
+from typing import Iterable, Iterator
 
 from .io import BLOCK, SEGMENT, Device
 from .logs import Log, LogEntry, Pointer, TransientLog
@@ -379,9 +380,24 @@ class ParallaxStore:
         return self._scan(start, end, None, internal=internal)
 
     def _scan(self, start: bytes, end: bytes | None, count: int | None, *, internal: bool = False) -> list[tuple[bytes, bytes]]:
+        limit = count if count is not None else (1 << 62)
+        return list(itertools.islice(self.iter_range(start, end, internal=internal), limit))
+
+    def iter_range(self, start: bytes, end: bytes | None = None, *,
+                   internal: bool = False) -> Iterator[tuple[bytes, bytes]]:
+        """Lazy sorted stream of live ``(key, value)`` pairs from ``start``.
+
+        The merged read path behind :meth:`scan` / :meth:`scan_range` (both are
+        ``islice`` over this): sources are snapshotted at the call (L0 sorted
+        once, one cursor per level) and every device/app-byte charge is paid
+        when the row is *yielded*, so consuming ``k`` rows costs exactly what
+        ``scan(start, k)`` does — rows never pulled are never charged.  The
+        stream is only valid while the store is not written to or compacted;
+        interleaving writes with iteration is undefined (take a fresh iterator
+        after mutating, like a RocksDB iterator without a snapshot pin).
+        """
         if not internal:
             self.stats.scans += 1
-        limit = count if count is not None else (1 << 62)
         iters: list[Iterable[IndexEntry]] = []
         l0_items = [self.l0[k] for k in sorted(self.l0) if self.l0[k].key >= start]
         iters.append(iter(l0_items))
@@ -392,11 +408,14 @@ class ParallaxStore:
             e = next(it, None)
             if e is not None:
                 heapq.heappush(heap, (e.key, -e.lsn, src, e))
-        its = iters
-        out: list[tuple[bytes, bytes]] = []
+        return self._merge_rows(iters, heap, end, internal)
+
+    def _merge_rows(self, its: list[Iterable[IndexEntry]],
+                    heap: list[tuple[bytes, int, int, IndexEntry]],
+                    end: bytes | None, internal: bool) -> Iterator[tuple[bytes, bytes]]:
         last_key: bytes | None = None
         scanned_bytes = [0] * len(its)
-        while heap and len(out) < limit:
+        while heap:
             key, _, src, e = heapq.heappop(heap)
             if end is not None and key >= end:
                 # sources are sorted, so this source is exhausted for the range
@@ -418,8 +437,7 @@ class ParallaxStore:
             value = self._value_of(e)
             if not internal:
                 self.stats.app_bytes += len(key) + len(value)
-            out.append((key, value))
-        return out
+            yield (key, value)
 
     # ---------------------------------------------------------- ranged delete
     def newest_entries(self, start: bytes, end: bytes | None) -> dict[bytes, IndexEntry]:

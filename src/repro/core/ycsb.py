@@ -25,9 +25,27 @@ stores without them), preserving stream order and visible state.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterator
 
 import numpy as np
+
+# warn-once registry for the legacy driver shims (PR 5): the canonical entry
+# point is repro.api.execute on a repro.api.open() engine; these module-level
+# drivers keep working for one release but nag exactly once per process.
+# repro.api.reset_deprecation_warnings() clears this (tests/test_deprecations).
+_DEPRECATED_WARNED: set[str] = set()
+
+
+def _warn_deprecated(symbol: str, replacement: str) -> None:
+    if symbol in _DEPRECATED_WARNED:
+        return
+    _DEPRECATED_WARNED.add(symbol)
+    warnings.warn(
+        f"{symbol} is deprecated; use {replacement}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 KEY_SIZE = 24
 VALUE_SIZES = {"small": 9, "medium": 104, "large": 1004}
@@ -168,6 +186,21 @@ def _flush_batch(store, kind: str, batch: list[Op]) -> None:
 
 def execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0,
             migrate_budget: int = 0) -> dict:
+    """Deprecated shim for :func:`_execute` — the serial op-stream driver.
+
+    Use :func:`repro.api.execute` on an engine from :func:`repro.api.open`
+    instead: one driver covers every partitioning × execution combination.
+    Warns :class:`DeprecationWarning` once per process, then delegates
+    unchanged (the differential oracle still replays legacy paths through it).
+    """
+    _warn_deprecated("repro.core.ycsb.execute",
+                     "repro.api.execute(engine, ops, ...) on a repro.api.open() engine")
+    return _execute(store, ops, gc_every=gc_every, batch_size=batch_size,
+                    migrate_budget=migrate_budget)
+
+
+def _execute(store, ops: Iterator[Op], gc_every: int = 0, batch_size: int = 0,
+             migrate_budget: int = 0) -> dict:
     """Drive a store through an op stream; returns op counts.
 
     ``batch_size == 0`` (the default) issues one call per op — the original
@@ -280,6 +313,25 @@ def execute_async(store, ops: Iterator[Op], *, batch_size: int = 64,
                   workers: int = 4, pipeline: bool = True, gc_every: int = 0,
                   migrate_budget: int = 0, pace: float = 0.0,
                   executor=None) -> dict:
+    """Deprecated shim for :func:`_execute_async` — the async-engine driver.
+
+    Use :func:`repro.api.execute` on an engine opened with
+    ``execution="async"`` instead.  Warns :class:`DeprecationWarning` once per
+    process, then delegates unchanged.
+    """
+    _warn_deprecated("repro.core.ycsb.execute_async",
+                     "repro.api.execute(engine, ops, ...) on an engine opened "
+                     "with execution='async'")
+    return _execute_async(store, ops, batch_size=batch_size, workers=workers,
+                          pipeline=pipeline, gc_every=gc_every,
+                          migrate_budget=migrate_budget, pace=pace,
+                          executor=executor)
+
+
+def _execute_async(store, ops: Iterator[Op], *, batch_size: int = 64,
+                   workers: int = 4, pipeline: bool = True, gc_every: int = 0,
+                   migrate_budget: int = 0, pace: float = 0.0,
+                   executor=None) -> dict:
     """Drive a sharded store through an op stream on the async engine.
 
     Same batching semantics as :func:`execute` with ``batch_size > 0`` —

@@ -1,0 +1,178 @@
+"""Public-API snapshot: names and signatures of `repro.api` / `repro.core`.
+
+An accidental rename, a dropped export, or a changed default in the public
+surface should fail CI loudly, not surface as a downstream breakage.  The
+snapshot below is the *intended* surface — when a PR changes the API on
+purpose, update the snapshot in the same commit (that diff is the review
+artifact).  Private names (leading underscore) and dunders other than
+``__init__`` are out of scope by design.
+"""
+import inspect
+
+import pytest
+
+import repro.api as api
+import repro.core as core
+
+# ---------------------------------------------------------------- repro.api
+API_ALL = [
+    "ClosedError",
+    "ConfigError",
+    "Engine",
+    "EngineConfig",
+    "EngineError",
+    "ExecutionConfig",
+    "Iterator",
+    "PartitioningConfig",
+    "WriteBatch",
+    "execute",
+    "open",
+    "reset_deprecation_warnings",
+]
+
+API_FUNCTIONS = {
+    "open": "(config: 'EngineConfig | None' = None, **overrides) -> 'Engine'",
+    "execute": "(engine: 'Engine', ops, *, batch_size: 'int | None' = None, "
+               "gc_every: 'int | None' = None, migrate_budget: 'int | None' = None) -> 'dict'",
+    "reset_deprecation_warnings": "() -> 'None'",
+}
+
+API_METHODS = {
+    "Engine": {
+        "__init__": "(self, config: 'EngineConfig')",
+        "amplification": "(self) -> 'float'",
+        "close": "(self, wait: 'bool' = True) -> 'None'",
+        "closed": "<property>",
+        "crash": "(self)",
+        "delete": "(self, key: 'bytes') -> 'None'",
+        "device_time": "(self, policy: 'str | None' = None) -> 'float'",
+        "flush_all": "(self) -> 'None'",
+        "gc_tick": "(self, force: 'bool' = False)",
+        "get": "(self, key: 'bytes') -> 'bytes | None'",
+        "iterator": "(self, start: 'bytes' = b'') -> 'Iterator'",
+        "migration_tick": "(self, budget: 'int | None' = None) -> 'int'",
+        "put": "(self, key: 'bytes', value: 'bytes') -> 'None'",
+        "recover": "(self) -> 'None'",
+        "scan": "(self, start: 'bytes', count: 'int') -> 'list[tuple[bytes, bytes]]'",
+        "space_bytes": "(self) -> 'int'",
+        "stats": "(self) -> 'dict'",
+        "store": "<property>",
+        "update": "(self, key: 'bytes', value: 'bytes') -> 'None'",
+        "write": "(self, batch: 'WriteBatch') -> 'None'",
+        "write_batch": "(self) -> 'WriteBatch'",
+    },
+    "Iterator": {
+        "__init__": "(self, engine: \"'Engine'\", start: 'bytes' = b'')",
+        "key": "(self) -> 'bytes'",
+        "next": "(self) -> 'None'",
+        "seek": "(self, key: 'bytes') -> \"'Iterator'\"",
+        "seek_to_first": "(self) -> \"'Iterator'\"",
+        "valid": "(self) -> 'bool'",
+        "value": "(self) -> 'bytes'",
+    },
+    "WriteBatch": {
+        "__init__": "(self, engine: \"'Engine'\")",
+        "clear": "(self) -> 'None'",
+        "delete": "(self, key: 'bytes') -> \"'WriteBatch'\"",
+        "put": "(self, key: 'bytes', value: 'bytes') -> \"'WriteBatch'\"",
+        "update": "(self, key: 'bytes', value: 'bytes') -> \"'WriteBatch'\"",
+    },
+}
+
+CONFIG_FIELDS = {
+    "EngineConfig": ["store", "partitioning", "execution", "batch_size", "gc_every"],
+    "PartitioningConfig": [
+        "scheme", "shards", "boundaries", "rebalance_window", "split_factor",
+        "merge_factor", "min_split_keys", "max_shards", "auto_rebalance",
+        "migration_batch_keys", "migrate_budget",
+    ],
+    "ExecutionConfig": ["mode", "workers", "pipeline", "pace", "max_pending", "overlap"],
+}
+
+CONFIG_DEFAULTS = {
+    ("PartitioningConfig", "scheme"): "none",
+    ("PartitioningConfig", "shards"): 1,
+    ("PartitioningConfig", "migration_batch_keys"): 128,
+    ("PartitioningConfig", "migrate_budget"): 0,
+    ("ExecutionConfig", "mode"): "serial",
+    ("ExecutionConfig", "workers"): 4,
+    ("ExecutionConfig", "pipeline"): True,
+    ("ExecutionConfig", "pace"): 0.0,
+    ("ExecutionConfig", "overlap"): "ideal",
+    ("EngineConfig", "batch_size"): None,
+    ("EngineConfig", "gc_every"): 0,
+}
+
+# --------------------------------------------------------------- repro.core
+CORE_ALL = [
+    "BLOCK", "CHUNK", "SEGMENT", "Device", "DeviceStats", "overlap_time",
+    "BatchHandle", "ShardExecutor",
+    "Log", "LogEntry", "Pointer", "TransientLog",
+    "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
+    "CrashPoint", "MetadataLog",
+    "T_ML", "T_SM", "SizePolicy",
+    "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
+    "capacity_ratio", "levels_for_dataset", "separation_benefit",
+    "ParallaxStore", "StoreConfig", "StoreStats",
+    "BaseShardedStore", "ShardedStore", "MigrationState", "RangeShardedStore", "route",
+]
+
+
+def public_surface(klass) -> dict:
+    out = {}
+    for name, member in sorted(vars(klass).items()):
+        if name.startswith("_") and name != "__init__":
+            continue
+        if isinstance(member, (staticmethod, classmethod)):
+            member = member.__func__
+        if isinstance(member, property):
+            out[name] = "<property>"
+        elif callable(member):
+            out[name] = str(inspect.signature(member))
+    return out
+
+
+def test_api_all_is_exact():
+    assert api.__all__ == API_ALL
+    for name in API_ALL:
+        assert hasattr(api, name), name
+
+
+def test_api_function_signatures():
+    for name, expected in API_FUNCTIONS.items():
+        assert str(inspect.signature(getattr(api, name))) == expected, name
+
+
+@pytest.mark.parametrize("klass", sorted(API_METHODS))
+def test_api_class_surfaces(klass):
+    assert public_surface(getattr(api, klass)) == API_METHODS[klass], klass
+
+
+def test_exception_hierarchy():
+    assert issubclass(api.ClosedError, api.EngineError)
+    assert issubclass(api.ConfigError, api.EngineError)
+    assert issubclass(api.ConfigError, ValueError)
+    assert issubclass(api.EngineError, Exception)
+
+
+@pytest.mark.parametrize("klass", sorted(CONFIG_FIELDS))
+def test_config_dataclass_fields(klass):
+    import dataclasses
+
+    cls = getattr(api, klass)
+    assert [f.name for f in dataclasses.fields(cls)] == CONFIG_FIELDS[klass]
+    assert cls.__dataclass_params__.frozen
+
+
+def test_config_defaults_pinned():
+    for (klass, field), expected in CONFIG_DEFAULTS.items():
+        inst = getattr(api, klass)()
+        got = getattr(inst, field)
+        # EngineConfig coerces its sub-config fields in __post_init__
+        assert got == expected, (klass, field, got)
+
+
+def test_core_all_is_exact():
+    assert core.__all__ == CORE_ALL
+    for name in CORE_ALL:
+        assert hasattr(core, name), name

@@ -1,0 +1,93 @@
+"""Legacy shims: every deprecated symbol warns exactly once and still works.
+
+The unified engine API (repro.api) replaced the module-level drivers; the old
+imports live on for one release as thin shims that emit a single
+``DeprecationWarning`` per process and then delegate unchanged.  CI runs this
+module standalone under ``-W error::DeprecationWarning`` (see
+.github/workflows/ci.yml) so an *unexpected* deprecation anywhere on the
+import path — or a shim that warns on every call instead of once — fails the
+job; inside the tests, ``warnings.catch_warnings`` scopes recording filters
+so the expected warnings are observed rather than raised.
+"""
+import warnings
+
+import pytest
+
+import repro.api as api
+from repro.core import ParallaxStore, ShardedStore, StoreConfig
+from repro.core import ycsb
+from repro.core.ycsb import Workload, make_key
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def load(nk=150, seed=3):
+    return Workload("load_a", "SD", num_keys=nk, num_ops=0, seed=seed).load_ops()
+
+
+# (shim, make_store, call) — every deprecated legacy symbol, exercised
+DEPRECATED = [
+    ("repro.core.ycsb.execute",
+     lambda: ParallaxStore(small_config()),
+     lambda store: ycsb.execute(store, load())),
+    ("repro.core.ycsb.execute_async",
+     lambda: ShardedStore(2, small_config()),
+     lambda store: ycsb.execute_async(store, load(), batch_size=32, workers=2)),
+]
+
+
+@pytest.mark.parametrize("symbol,make_store,call", DEPRECATED,
+                         ids=[d[0] for d in DEPRECATED])
+def test_shim_warns_exactly_once_and_still_functions(symbol, make_store, call):
+    api.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        counts = call(make_store())
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)
+            and symbol in str(w.message)]
+    assert len(deps) == 1, [str(w.message) for w in first]
+    assert "repro.api" in str(deps[0].message)  # the message names the replacement
+    assert counts == {"insert": 150, "update": 0, "read": 0, "scan": 0}
+
+    # second call: the registry remembers — silent, still functional
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        counts = call(make_store())
+    assert not [w for w in second if issubclass(w.category, DeprecationWarning)
+                and symbol in str(w.message)]
+    assert counts["insert"] == 150
+
+
+def test_shims_delegate_byte_identically():
+    """The shim path and the engine path drive identical state: the legacy
+    call pattern still *works*, not just warns."""
+    api.reset_deprecation_warnings()
+    legacy = ShardedStore(3, small_config(bloom_bits_per_key=10))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ycsb.execute(legacy, load(300), batch_size=32)
+    with api.open(api.EngineConfig(store=small_config(bloom_bits_per_key=10),
+                                   partitioning="hash:3")) as db:
+        api.execute(db, load(300), batch_size=32)
+        probe = [make_key(i) for i in range(320)]
+        assert [db.get(k) for k in probe] == [legacy.get(k) for k in probe]
+        assert db.stats()["device"]["bytes_written"] == \
+            sum(s.device.stats.bytes_written for s in legacy.shards)
+
+
+def test_engine_api_itself_never_warns():
+    """Driving through repro.api must not trip the deprecation shims."""
+    api.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with api.open(partitioning="hash:2", execution="async",
+                      store=small_config()) as db:
+            api.execute(db, load())
+            db.put(make_key(999), b"v" * 30)
+            assert db.get(make_key(999)) == b"v" * 30
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]

@@ -13,8 +13,11 @@ model when hypothesis is installed (optional-deps policy: importorskip) —
 see ``tests/test_differential_stateful.py``; this module's deterministic
 streams always run.
 """
+import dataclasses
+
 import pytest
 
+import repro.api as api
 from repro.core import ParallaxStore, RangeShardedStore, ShardedStore, StoreConfig
 from repro.core.ycsb import Workload, execute, make_key, payload
 
@@ -139,6 +142,144 @@ def test_differential_migration_perpetually_in_flight():
     throttled.drain_migration()
     assert throttled.migration is None
     assert_agree(fleet, num_keys)                       # drained agreement
+
+
+# ---------------------------------------------------------------- repro.api
+# Acceptance (PR 5): the same YCSB streams through repro.api.Engine for
+# {none, hash, range} x {serial, async} must be byte-identical to the legacy
+# front-ends — results, StoreStats, DeviceStats, and (range) the metadata-WAL
+# record stream — because the engine *composes* the legacy paths, it does not
+# reimplement them.
+
+RANGE_POLICY = dict(rebalance_window=150, split_factor=1.05, merge_factor=0.9)
+
+
+def engine_fleet(num_keys: int) -> dict[str, api.Engine]:
+    """One engine per partitioning x execution combination, configured to
+    mirror :func:`make_fleet`'s legacy stores exactly."""
+    keys = [make_key(i) for i in range(num_keys)]
+    range_part = api.PartitioningConfig.range_for_keys(keys, 3, **RANGE_POLICY)
+    fleet = {}
+    for mode in ("serial", "async"):
+        fleet[f"none-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(), execution=mode))
+        fleet[f"hash-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(bloom_bits_per_key=10), partitioning="hash:3",
+            execution=mode))
+        fleet[f"range-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(bloom_bits_per_key=10), partitioning=range_part,
+            execution=mode))
+    return fleet
+
+
+def legacy_twin(name: str, legacy_fleet: dict):
+    return legacy_fleet[name.split("-", 1)[0].replace("none", "bare")]
+
+
+def assert_engine_state_matches_legacy(engine: api.Engine, legacy) -> None:
+    """Full-state agreement beyond results: aggregate StoreStats, aggregate
+    and per-store DeviceStats, front-end routing counters, and for the range
+    scheme the topology + the metadata-WAL record stream."""
+    store = engine.store
+    if isinstance(legacy, ParallaxStore):
+        # the none-partitioned engine: aggregate stats equal the bare store's
+        # (the async wrapper adds front-end counters on top, nothing else)
+        agg = store.stats if isinstance(store, ParallaxStore) else store.aggregate_stats()
+        dev = store.device.stats if isinstance(store, ParallaxStore) else store.device_stats()
+        assert dataclasses.asdict(agg) == dataclasses.asdict(legacy.stats)
+        assert dataclasses.asdict(dev) == dataclasses.asdict(legacy.device.stats)
+        return
+    assert dataclasses.asdict(store.aggregate_stats()) == dataclasses.asdict(legacy.aggregate_stats())
+    assert [dataclasses.asdict(s.device.stats) for s in store._all_stores()] == \
+        [dataclasses.asdict(s.device.stats) for s in legacy._all_stores()]
+    assert (store.gets, store.get_probes) == (legacy.gets, legacy.get_probes)
+    assert (store.scans, store.scan_probes) == (legacy.scans, legacy.scan_probes)
+    if isinstance(legacy, RangeShardedStore):
+        assert store.boundaries == legacy.boundaries
+        assert store._shard_ids == legacy._shard_ids
+        assert store.metalog.records == legacy.metalog.records
+        assert store.get_fallbacks == legacy.get_fallbacks
+
+
+def test_engine_matches_legacy_all_combos():
+    num_keys = 700
+    legacy = make_fleet(num_keys, rebalance_window=150,
+                        split_factor=1.05, merge_factor=0.9)
+    engines = engine_fleet(num_keys)
+    streams = [
+        lambda: Workload("load_a", "SD", num_keys=num_keys, num_ops=0, seed=41).load_ops(),
+        lambda: Workload("run_a", "SD", num_keys=num_keys, num_ops=400, seed=41).run_ops(),
+    ]
+    try:
+        for ops_factory in streams:
+            replay(legacy, ops_factory)
+            for name, eng in engines.items():
+                # the legacy replay drove bare per-op and sharded at batch 32
+                bs = 0 if name == "none-serial" else 32
+                api.execute(eng, ops_factory(), batch_size=bs)
+        assert legacy["range"].splits + legacy["range"].merges > 0  # policy live
+        for name, eng in engines.items():
+            assert_engine_state_matches_legacy(eng, legacy_twin(name, legacy))
+        # results through the uniform surface agree with the bare oracle
+        bare = legacy["bare"]
+        probe = [make_key(i) for i in range(num_keys + 50)]
+        expect = [bare.get(k) for k in probe]
+        full = bare.scan(b"", 2 * num_keys + 100)
+        for name, eng in engines.items():
+            assert [eng.get(k) for k in probe] == expect, name
+            assert eng.scan(b"", 2 * num_keys + 100) == full, name
+            assert list(eng.iterator()) == full, name
+    finally:
+        for eng in engines.values():
+            eng.close()
+
+
+def test_engine_crash_recover_mid_migration_matches_legacy():
+    """Crash with a migration in flight: legacy serial range store vs the
+    async engine — recovered topology, WAL stream and state stay identical."""
+    nk = 500
+    keys = [make_key(i) for i in range(nk)]
+    params = dict(auto_rebalance=False, migration_batch_keys=1)
+    legacy = RangeShardedStore.for_keys(
+        keys, 3, small_config(bloom_bits_per_key=10), **params)
+    eng = api.open(api.EngineConfig(
+        store=small_config(bloom_bits_per_key=10),
+        partitioning=api.PartitioningConfig.range_for_keys(keys, 3, **params),
+        execution=api.ExecutionConfig(mode="async", workers=4),
+    ))
+    try:
+        load = lambda: Workload("load_a", "SD", num_keys=nk, num_ops=0, seed=43).load_ops()
+        run = lambda s: Workload("run_a", "SD", num_keys=nk, num_ops=30, seed=s).run_ops()
+        execute(legacy, load(), batch_size=32)
+        api.execute(eng, load(), batch_size=32)
+        for st, drive in ((legacy, None), (eng.store, eng)):
+            (st.flush_all if drive is None else drive.flush_all)()
+            hot = max(range(st.num_shards),
+                      key=lambda i: len(st.shards[i].live_keys_in(*st.bounds(i))))
+            assert st.split(hot, background=True)
+            if drive is None:
+                st.migration_tick()
+            else:
+                drive.migration_tick()
+        execute(legacy, run(44), batch_size=32, migrate_budget=1)
+        api.execute(eng, run(44), batch_size=32, migrate_budget=1)
+        assert legacy.migration is not None and eng.store.migration is not None
+        legacy.crash(), legacy.recover()
+        eng.crash(), eng.recover()
+        assert legacy.migration is not None and eng.store.migration is not None
+        assert eng.store.metalog.records == legacy.metalog.records
+        # resume under traffic, then drain both and re-check everything
+        execute(legacy, run(45), batch_size=32, migrate_budget=64)
+        api.execute(eng, run(45), batch_size=32, migrate_budget=64)
+        legacy.drain_migration()
+        eng.store.drain_migration()  # queues are drained after api.execute
+        assert legacy.migration is None and eng.store.migration is None
+        assert_engine_state_matches_legacy(eng, legacy)
+        probe = [make_key(i) for i in range(nk + 20)]
+        assert [eng.get(k) for k in probe] == [legacy.get(k) for k in probe]
+        assert list(eng.iterator()) == legacy.scan(b"", 2 * nk)
+    finally:
+        eng.close()
 
 
 class _CrashNow(Exception):

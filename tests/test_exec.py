@@ -185,6 +185,39 @@ def test_async_range_crash_recover_mid_migration():
     assert_identical(serial, async_, nk)
 
 
+@pytest.mark.parametrize("workers", [1, 4])
+def test_engine_async_range_matches_legacy_serial(workers):
+    """PR 5 acceptance: the repro.api engine's async path — persistent
+    executor, api.execute driver — is byte-identical to the legacy serial
+    range store on the same stream, including the WAL record stream, with
+    the skew rebalancer and throttled migration live."""
+    import repro.api as api
+
+    nk = 500
+    keys = [make_key(i) for i in range(nk)]
+    params = dict(rebalance_window=100, split_factor=1.05, merge_factor=0.9,
+                  migration_batch_keys=16)
+    serial = RangeShardedStore.for_keys(keys, 3, small_config(), **params)
+    execute(serial, load_ops(nk, 19), batch_size=BATCH, migrate_budget=8)
+    execute(serial, run_ops(nk, 400, 19), batch_size=BATCH, migrate_budget=8)
+    cfg = api.EngineConfig(
+        store=small_config(),
+        partitioning=api.PartitioningConfig.range_for_keys(keys, 3, **params),
+        execution=api.ExecutionConfig(mode="async", workers=workers),
+    )
+    with api.open(cfg) as eng:
+        api.execute(eng, load_ops(nk, 19), batch_size=BATCH, migrate_budget=8)
+        api.execute(eng, run_ops(nk, 400, 19), batch_size=BATCH, migrate_budget=8)
+        async_ = eng.store
+        assert serial.splits + serial.merges > 0
+        assert serial.boundaries == async_.boundaries
+        assert serial.metalog.records == async_.metalog.records
+        assert serial.get_fallbacks == async_.get_fallbacks
+        assert_identical(serial, async_, nk)
+        # and the uniform read surface agrees with the raw front-end
+        assert list(eng.iterator(make_key(nk // 2))) == serial.scan(make_key(nk // 2), 2 * nk)
+
+
 def test_async_range_paced_matches_unpaced():
     """Pacing only sleeps — it must not change a single byte of state."""
     nk = 300
