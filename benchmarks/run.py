@@ -26,6 +26,7 @@ import traceback
 
 from . import (
     bench_ablation,
+    bench_analysis,
     bench_thresholds,
     bench_checkpoint,
     bench_fig1,
@@ -52,6 +53,7 @@ BENCHES = [
     ("kernels", bench_kernels.main),
     ("checkpoint_substrate", bench_checkpoint.main),
     ("roofline", bench_roofline.main),
+    ("analysis_overhead", bench_analysis.main),
 ]
 
 
@@ -62,6 +64,7 @@ SMOKE_BENCHES = [
     ("fig5_ycsb", lambda emit: bench_ycsb.main(emit, smoke=True)),
     ("shard_batch_frontend", lambda emit: bench_shard.main(emit, smoke=True)),
     ("range_vs_hash_sharding", lambda emit: bench_range.main(emit, smoke=True)),
+    ("analysis_overhead", lambda emit: bench_analysis.main(emit, smoke=True)),
 ]
 
 

@@ -133,10 +133,28 @@ def main(argv: list[str]) -> int:
     if len(args) != 2:
         print(__doc__, file=sys.stderr)
         return 2
-    with open(args[0]) as f:
-        current = json.load(f)
-    with open(args[1]) as f:
-        baseline = json.load(f)
+    loaded = []
+    for role, path in (("current", args[0]), ("baseline", args[1])):
+        try:
+            with open(path) as f:
+                loaded.append(json.load(f))
+        except OSError as exc:
+            print(f"error: cannot read {role} file {path}: {exc.strerror or exc}",
+                  file=sys.stderr)
+            if role == "baseline":
+                print("hint: regenerate the baseline with\n"
+                      "  PYTHONPATH=src python -m benchmarks.run --smoke "
+                      "--json BENCH_BASELINE.json", file=sys.stderr)
+            return 2
+        except json.JSONDecodeError as exc:
+            print(f"error: {role} file {path} is not valid JSON: {exc}",
+                  file=sys.stderr)
+            if role == "baseline":
+                print("hint: regenerate the baseline with\n"
+                      "  PYTHONPATH=src python -m benchmarks.run --smoke "
+                      "--json BENCH_BASELINE.json", file=sys.stderr)
+            return 2
+    current, baseline = loaded
     problems, warnings = compare(current, baseline, tol)
     for w in warnings:
         print(f"WARN  {w}")

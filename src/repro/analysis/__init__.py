@@ -1,0 +1,23 @@
+"""Static + dynamic checkers for the engine's concurrency/durability contracts.
+
+The async sharded engine's correctness rests on invariants that used to live
+only in comments and after-the-fact differential tests: single-coordinator
+submission, per-store exclusivity locks created coordinator-side only,
+front-end counters mutated only under ``_stats_lock``, metadata-WAL
+record-then-apply and flush-before-record ordering, and the determinism rules
+(crc32 not ``hash()``, no wall-clock in modeled paths).  This package checks
+them mechanically:
+
+* :mod:`repro.analysis.lint` — a stdlib-``ast`` static linter with pluggable
+  rules keyed on ``# contract:`` source annotations; run it as
+  ``scripts/lint_contracts.py`` (a CI hard gate with a seeded-violation
+  self-test under ``tests/fixtures/``).
+* :mod:`repro.analysis.racecheck` — an Eraser-style dynamic lockset race
+  detector, enabled with ``EngineConfig(debug_checks=True)`` or the
+  ``REPRO_DEBUG_CHECKS`` env var.  Nothing here is imported unless a checker
+  is switched on, so the production path provably pays nothing.
+
+See ``docs/analysis.md`` for the annotation vocabulary and how to add rules.
+"""
+
+__all__ = ["lint", "racecheck"]

@@ -63,6 +63,7 @@ warn once per process and delegate unchanged (``tests/test_deprecations.py``).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Iterable, Iterator as _TypingIterator
 
 from repro.core import ycsb as _ycsb
@@ -272,6 +273,13 @@ class EngineConfig:
     and ``execution`` accept shorthand strings (``"hash:4"``, ``"async"``).
     ``batch_size=None`` means auto: per-op for a bare serial store (the
     legacy single-store path), 64 otherwise.
+
+    ``debug_checks=True`` attaches the :mod:`repro.analysis.racecheck`
+    lockset race detector to the engine (also switchable fleet-wide with the
+    ``REPRO_DEBUG_CHECKS`` env var); results and stats stay byte-identical,
+    and a clean :meth:`Engine.close` raises
+    :class:`~repro.analysis.racecheck.RaceViolation` if any access raced.
+    When off (the default) the detector module is never even imported.
     """
 
     store: StoreConfig = dataclasses.field(default_factory=StoreConfig)
@@ -279,6 +287,7 @@ class EngineConfig:
     execution: ExecutionConfig | str = dataclasses.field(default_factory=ExecutionConfig)
     batch_size: int | None = None
     gc_every: int = 0
+    debug_checks: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "partitioning", PartitioningConfig.parse(self.partitioning))
@@ -466,6 +475,14 @@ class Iterator:
             self._advance()
 
 
+def _debug_checks_env() -> bool:
+    """Fleet-wide race-detector switch: any value of ``REPRO_DEBUG_CHECKS``
+    other than empty / ``0`` / ``false`` / ``off`` enables it (CI's nightly
+    slow sweep exports ``REPRO_DEBUG_CHECKS=1``)."""
+    return os.environ.get("REPRO_DEBUG_CHECKS", "").strip().lower() not in (
+        "", "0", "false", "off")
+
+
 # -------------------------------------------------------------------- engine
 class Engine:
     """A uniform KV surface over any partitioning × execution combination.
@@ -488,6 +505,14 @@ class Engine:
                 self._store, e.workers, pipeline=e.pipeline, pace=e.pace,
                 max_pending=e.max_pending,
             )
+        # the race detector is opt-in and imported lazily: with debug checks
+        # off, nothing of repro.analysis ever loads (zero-overhead contract,
+        # held by tests/test_analysis_racecheck.py)
+        self.race_checker = None
+        if config.debug_checks or _debug_checks_env():
+            from repro.analysis.racecheck import attach_engine
+
+            self.race_checker = attach_engine(self)
 
     @staticmethod
     def _build_store(cfg: EngineConfig):
@@ -525,12 +550,17 @@ class Engine:
 
     def close(self, wait: bool = True) -> None:
         """Close the engine (idempotent).  With async execution the executor
-        shuts down — draining in-flight work first unless ``wait=False``."""
+        shuts down — draining in-flight work first unless ``wait=False``.
+        On a clean close (``wait=True``) of a ``debug_checks`` engine, any
+        lockset violation the race detector recorded is raised as
+        :class:`~repro.analysis.racecheck.RaceViolation`."""
         if self._closed:
             return
         self._closed = True
         if self._executor is not None:
             self._executor.close(wait=wait)
+        if wait and self.race_checker is not None:
+            self.race_checker.raise_if_violations()
 
     def __enter__(self) -> "Engine":
         return self
@@ -542,10 +572,12 @@ class Engine:
         if self._closed:
             raise ClosedError("engine is closed")
 
+    # contract: coordinator-only
     def _drain(self) -> None:
         if self._executor is not None:
             self._executor.drain()
 
+    # contract: coordinator-only
     def _sequence(self, fn):
         """Run ``fn`` with nothing in flight (coordinator-only)."""
         if self._executor is None:

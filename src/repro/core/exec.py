@@ -122,6 +122,7 @@ class ShardExecutor:
       (0 = no pacing; see module docstring).
     """
 
+    # contract: coordinator-only
     def __init__(self, store: BaseShardedStore, workers: int = 4, *,
                  pipeline: bool = True, pace: float = 0.0, max_pending: int = 8):
         if workers < 1:
@@ -186,15 +187,22 @@ class ShardExecutor:
         by_id = self.store._by_id  # type: ignore[attr-defined]
         return [by_id[m.src_id], by_id[m.dst_id]]
 
+    # contract: coordinator-only
+    def _new_store_lock(self) -> threading.Lock:
+        """Factory for per-store exclusivity locks — the *only* place they are
+        created (worker threads must never create locks: two racing creations
+        would hand mis-queued tasks *different* locks and blind the very
+        assertion they implement).  The race detector overrides this per
+        instance to hand out tracked locks."""
+        return threading.Lock()
+
     def _lock_of(self, store: ParallaxStore) -> threading.Lock:
         """Coordinator-only: the per-store exclusivity lock, created at
-        enqueue time (worker threads must never create locks — two racing
-        creations would hand mis-queued tasks *different* locks and blind the
-        very assertion they implement)."""
+        enqueue time."""
         with self._cv:
             lock = self._locks.get(id(store))
             if lock is None:
-                lock = self._locks[id(store)] = threading.Lock()
+                lock = self._locks[id(store)] = self._new_store_lock()
             return lock
 
     def _enqueue(self, key, stores: list[ParallaxStore], fn: Callable[[], None],
@@ -211,7 +219,7 @@ class ShardExecutor:
             # submitter, so workers only ever *read* self._locks
             for s in stores:
                 if id(s) not in self._locks:
-                    self._locks[id(s)] = threading.Lock()
+                    self._locks[id(s)] = self._new_store_lock()
             self._pending += 1
             q = self._queues.get(key)
             if q is None:

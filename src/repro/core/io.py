@@ -157,6 +157,7 @@ class Device:
             self.stats.meta_written += nbytes
 
     # -- modeled operations --------------------------------------------------
+    # contract: single-threaded
     def random_read(self, offset: int, nbytes: int, kind: str = "get") -> None:
         """4 KB-granular random read through the block cache."""
         first = offset // BLOCK
@@ -172,6 +173,7 @@ class Device:
         ops = -(-nbytes // granularity)
         self._read(ops * min(granularity, max(nbytes, 1)) if ops == 1 else nbytes, ops, kind)
 
+    # contract: single-threaded
     def sequential_write(self, nbytes: int, granularity: int = CHUNK, kind: str = "log") -> None:
         """Direct-I/O append/compaction write at chunk/segment granularity."""
         if nbytes <= 0:

@@ -83,6 +83,7 @@ class Log:
         self.segments[seg.segment_id] = seg
         return seg
 
+    # contract: single-threaded
     def append(self, entry: LogEntry) -> Pointer:
         if self._tail is None or self._tail.used_bytes + entry.size > self.device.segment_bytes:
             self.flush()

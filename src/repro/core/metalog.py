@@ -67,6 +67,7 @@ class MetadataLog:
     non-blocking lock and raises on concurrent entry rather than interleave.
     """
 
+    # contract: coordinator-only
     def __init__(self, device: Device):
         self.device = device
         self._log = Log(device, "meta", kind="meta")

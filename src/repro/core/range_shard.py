@@ -107,6 +107,7 @@ class MigrationState:
 class RangeShardedStore(BaseShardedStore):
     """Contiguous key ranges over N ParallaxStores, rebalanced incrementally."""
 
+    # contract: coordinator-only
     def __init__(
         self,
         num_shards: int = 4,
@@ -224,6 +225,7 @@ class RangeShardedStore(BaseShardedStore):
         return self.shards[sid].get(key)
 
     # ------------------------------------------------------------------- scan
+    # contract: coordinator-only
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Range-local scan: only shards overlapping ``[start, ...)`` are probed.
 
@@ -251,6 +253,7 @@ class RangeShardedStore(BaseShardedStore):
         self._after_batch()  # scans feed the skew window like batched ops
         return out
 
+    # contract: coordinator-only
     def iter_rows(self, start: bytes = b""):
         """Lazy range-local row stream: shards stream one at a time in
         boundary order (their output is already globally sorted), each pulled
@@ -266,6 +269,7 @@ class RangeShardedStore(BaseShardedStore):
         self.scans += 1
         return self._iter_rows(start)
 
+    # contract: coordinator-only
     def _iter_rows(self, start: bytes):
         i = self.shard_of(start)
         while i < len(self.shards):
@@ -284,6 +288,7 @@ class RangeShardedStore(BaseShardedStore):
                 yield from self.shards[i].iter_range(first, hi)
             i += 1
 
+    # contract: coordinator-only
     def _shard_rows(self, i: int, start: bytes, need: int) -> list[tuple[bytes, bytes]]:
         """Up to ``need`` sorted live rows of shard ``i`` from ``start``,
         merged with the draining source's pending remainder when shard ``i``
@@ -403,6 +408,7 @@ class RangeShardedStore(BaseShardedStore):
         return changed
 
     # -------------------------------------------------------------- migration
+    # contract: coordinator-only, record-then-apply
     def split(self, i: int, at: bytes | None = None, *, background: bool = False) -> bool:
         """Split shard ``i`` at ``at`` (default: its median live key).
 
@@ -444,6 +450,7 @@ class RangeShardedStore(BaseShardedStore):
             self.drain_migration()
         return True
 
+    # contract: coordinator-only, record-then-apply
     def merge(self, i: int, *, background: bool = False) -> None:
         """Merge shard ``i+1`` into shard ``i`` (cold-neighbor compaction).
 
@@ -476,6 +483,7 @@ class RangeShardedStore(BaseShardedStore):
         if not background:
             self.drain_migration()
 
+    # contract: coordinator-only, record-then-apply, flush-before-record
     def migration_tick(self, max_keys: int | None = None) -> int:
         """Advance the in-flight migration by one batch; returns keys copied.
 

@@ -64,6 +64,7 @@ class BaseShardedStore:
     stat aggregation — routes through those and is shared.
     """
 
+    # contract: coordinator-only
     def __init__(self, num_shards: int = 4, config: StoreConfig | None = None):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -138,6 +139,7 @@ class BaseShardedStore:
         any extra store they consult)."""
         return self.shards[sid].get(key)
 
+    # contract: coordinator-only
     def get(self, key: bytes) -> bytes | None:
         self.gets += 1
         self.get_probes += 1
@@ -171,6 +173,7 @@ class BaseShardedStore:
                 shard.delete(keys[pos])
         self._after_batch()
 
+    # contract: coordinator-only
     def get_many(self, keys: Sequence[bytes]) -> list[bytes | None]:
         out: list[bytes | None] = [None] * len(keys)
         for sid, positions in self._group(keys).items():
@@ -279,6 +282,7 @@ class ShardedStore(BaseShardedStore):
         return route(key, len(self.shards))
 
     # ------------------------------------------------------------------- scan
+    # contract: coordinator-only
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Global sorted scan: k-way merge of per-shard scans.
 
@@ -293,6 +297,7 @@ class ShardedStore(BaseShardedStore):
         per_shard = [s.scan(start, count) for s in self.shards]
         return list(itertools.islice(heapq.merge(*per_shard), count))
 
+    # contract: coordinator-only
     def iter_rows(self, start: bytes = b"") -> Iterator[tuple[bytes, bytes]]:
         """Incremental k-way merge of per-shard lazy streams.
 

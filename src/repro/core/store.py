@@ -169,6 +169,7 @@ class ParallaxStore:
         self.stats.deletes += 1
         self._write(key, b"", tombstone=True, counted=True)
 
+    # contract: single-threaded
     def _write(self, key: bytes, value: bytes, *, tombstone: bool, counted: bool = False, internal: bool = False) -> None:
         if not internal:
             if not counted:
@@ -314,6 +315,7 @@ class ParallaxStore:
         # write the merged level (2 MB segment granularity direct I/O)
         self.device.sequential_write(dst.index_bytes, self.device.segment_bytes, kind="compaction")
 
+    # contract: flush-before-record
     def _write_redo_record(self) -> None:
         # The redo record must not precede the data it covers (§3.4): mediums
         # the merge spilled to the transient log become durable first, else a
@@ -348,6 +350,7 @@ class ParallaxStore:
                 return e
         return None
 
+    # contract: single-threaded
     def get(self, key: bytes) -> bytes | None:
         self.stats.gets += 1
         entry = self._locate(key)

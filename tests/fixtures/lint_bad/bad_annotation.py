@@ -1,0 +1,16 @@
+"""Planted violations: annotation hygiene.
+
+A typo'd marker would silently disable a rule; an ``exempt`` without a
+justification is an unaccountable suppression.  Both are violations.
+"""
+# lint-expect: contract-annotation
+
+
+# contract: coordinator-onyl
+def typo_disables_nothing():
+    pass
+
+
+def unjustified_suppression(self):
+    # contract: exempt()
+    self.reads += 1

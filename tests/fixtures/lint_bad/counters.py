@@ -1,0 +1,17 @@
+"""Planted violations: front-end counters mutated without the stats lock.
+
+Shared counters (``gets``, ``scan_probes``, ...) may only move under
+``with ..._stats_lock:`` or inside a ``coordinator-only`` function.
+"""
+# lint-expect: stats-lock
+
+
+class FrontEnd:
+    def __init__(self):
+        # even initialization counts unless the function is coordinator-only
+        self.gets = 0
+
+    def get(self, key):
+        self.gets += 1
+        self.get_probes += 1
+        return None

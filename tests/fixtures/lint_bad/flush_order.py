@@ -1,0 +1,14 @@
+"""Planted violation: durable record written before the data it covers.
+
+A checkpoint/redo record committed ahead of the destination flush would,
+after a crash, point at data that never became durable (the PR 1
+dangling-pointer class of bug).
+"""
+# lint-expect: flush-before-record
+
+
+class Migration:
+    # contract: flush-before-record
+    def tick(self, dst):
+        self.metalog.append({"kind": "checkpoint"})  # record first: wrong
+        dst.flush_all()

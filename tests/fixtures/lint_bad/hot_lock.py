@@ -1,0 +1,18 @@
+"""Planted violations: lock traffic on a single-threaded modeled hot path.
+
+``single-threaded`` functions are the byte-accounted hot paths; a lock there
+is either dead weight or evidence the path is no longer single-threaded.
+"""
+# lint-expect: lock-free-hot-path
+
+
+class Store:
+    # contract: single-threaded
+    def get(self, key):
+        with self._stats_lock:
+            self.reads = self.reads + 1
+        self._mu.acquire()
+        try:
+            return self.index.get(key)
+        finally:
+            self._mu.release()

@@ -1,0 +1,16 @@
+"""Planted violations: lock creation outside a coordinator-only function.
+
+Two worker threads racing to create "the" lock would each get their own —
+and the exclusivity assertion the lock implements would never fire.
+"""
+# lint-expect: coordinator-only-locks
+import threading
+
+_GLOBAL_LOCK = threading.Lock()  # module level is never coordinator-only
+
+
+class Worker:
+    def ensure_lock(self):
+        # an unannotated method may run on any thread
+        self._lock = threading.RLock()
+        return self._lock

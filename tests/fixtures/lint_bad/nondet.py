@@ -1,0 +1,22 @@
+"""Planted violations: nondeterminism in a modeled path.
+
+Builtin ``hash()`` is PYTHONHASHSEED-randomized, ``time.time()`` is
+wall-clock, and stdlib ``random`` is process-seeded — all three would make
+modeled byte counts differ across processes.
+"""
+# lint-expect: no-nondeterminism
+import time
+
+import random
+
+
+def cache_slot(key: bytes, nslots: int) -> int:
+    return hash(key) % nslots
+
+
+def stamp() -> float:
+    return time.time()
+
+
+def jitter() -> float:
+    return random.random()

@@ -1,0 +1,18 @@
+"""Planted violations: topology applied before the WAL record.
+
+Record-then-apply means a crash before the record leaves *no* applied state;
+mutating first opens a window where the in-memory topology has no durable
+evidence.
+"""
+# lint-expect: record-then-apply
+
+
+class Topology:
+    # contract: record-then-apply
+    def split(self, at):
+        self.boundaries.insert(1, at)  # applied before the record: wrong
+        self.metalog.append({"kind": "split_start", "at": at})
+
+    # contract: record-then-apply
+    def forgot_the_record(self, migration):
+        self._migration = migration

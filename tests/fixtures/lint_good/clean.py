@@ -1,0 +1,48 @@
+"""Disciplined twin of the bad fixtures — every rule satisfied.
+
+Covers: crc32 instead of hash(), coordinator-only lock creation,
+stats-lock-guarded counters, record-then-apply ordering, flush-before-record
+ordering, a lock-free single-threaded hot path, and a justified ``exempt``.
+"""
+import threading
+import zlib
+
+
+def cache_slot(key: bytes, nslots: int) -> int:
+    return zlib.crc32(key) % nslots
+
+
+class FrontEnd:
+    # contract: coordinator-only
+    def __init__(self):
+        self._stats_lock = threading.Lock()
+        self.gets = 0
+        self.get_probes = 0
+
+    def get(self, key):
+        with self._stats_lock:
+            self.gets += 1
+            self.get_probes += 1
+        return None
+
+    def get_cached(self, key):
+        # contract: exempt(counter is thread-local by construction here)
+        self.gets += 1
+        return None
+
+    # contract: record-then-apply
+    def split(self, at):
+        self.metalog.append({"kind": "split_start", "at": at})
+        self.boundaries.insert(1, at)
+
+    # contract: flush-before-record
+    def migration_tick(self, dst):
+        dst.flush_all()
+        self.metalog.append({"kind": "checkpoint"})
+
+
+class Store:
+    # contract: single-threaded
+    def get(self, key):
+        self.reads = self.reads + 1
+        return self.index.get(key)

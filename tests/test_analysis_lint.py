@@ -1,0 +1,310 @@
+"""Tests for the contract linter (``repro.analysis.lint``).
+
+Covers the annotation parser, every rule (good + bad inline sources), the
+seeded fixtures under ``tests/fixtures/lint_bad`` / ``lint_good``, the
+real-tree-is-clean invariant, and the CLI exit codes of
+``scripts/lint_contracts.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.contracts import FUNCTION_MARKERS, ModuleContracts
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures"
+LINT_SCRIPT = REPO / "scripts" / "lint_contracts.py"
+
+
+def rules_of(source: str) -> set[str]:
+    src = textwrap.dedent(source)
+    return {v.rule for v in lint_source("<test>", src)}
+
+
+# ---------------------------------------------------------------- contracts --
+
+
+def test_function_markers_parsed():
+    mod = ModuleContracts(
+        "<t>",
+        textwrap.dedent(
+            """
+            class C:
+                # contract: coordinator-only, record-then-apply
+                def split(self):
+                    pass
+            """
+        ),
+    )
+    (fn,) = mod.functions
+    assert mod.markers_of(fn) == {"coordinator-only", "record-then-apply"}
+    assert not mod.problems
+
+
+def test_unknown_marker_is_a_problem():
+    mod = ModuleContracts("<t>", "# contract: coordinator-onyl\n")
+    assert mod.problems and "coordinator-onyl" in mod.problems[0].message
+
+
+def test_exempt_requires_reason():
+    mod = ModuleContracts("<t>", "# contract: exempt()\nx = 1\n")
+    assert mod.problems
+    mod = ModuleContracts("<t>", "# contract: exempt(thread-local here)\nx = 1\n")
+    assert not mod.problems
+    assert mod.exempted(1) and mod.exempted(2) and not mod.exempted(3)
+
+
+def test_marker_vocabulary_is_closed():
+    assert FUNCTION_MARKERS == {
+        "coordinator-only",
+        "record-then-apply",
+        "flush-before-record",
+        "single-threaded",
+    }
+
+
+# -------------------------------------------------------------- rules (bad) --
+
+
+def test_no_nondeterminism_flags_hash_time_random():
+    assert "no-nondeterminism" in rules_of(
+        """
+        def slot(key, n):
+            return hash(key) % n
+        """
+    )
+    assert "no-nondeterminism" in rules_of(
+        """
+        import time
+
+        def stamp():
+            return time.time()
+        """
+    )
+    assert "no-nondeterminism" in rules_of("import random\n")
+    assert "no-nondeterminism" in rules_of("from random import random\n")
+
+
+def test_no_nondeterminism_allows_crc_and_sleep():
+    assert not rules_of(
+        """
+        import time
+        import zlib
+
+        def slot(key, n):
+            return zlib.crc32(key) % n
+
+        def pace():
+            time.sleep(0.001)  # pacing, not modeling
+        """
+    )
+
+
+def test_coordinator_only_locks():
+    bad = """
+        import threading
+
+        def anywhere(self):
+            self._mu = threading.Lock()
+        """
+    assert "coordinator-only-locks" in rules_of(bad)
+    good = """
+        import threading
+
+        # contract: coordinator-only
+        def __init__(self):
+            self._mu = threading.Lock()
+        """
+    assert "coordinator-only-locks" not in rules_of(good)
+
+
+def test_stats_lock_rule():
+    bad = """
+        class F:
+            def get(self, key):
+                self.gets += 1
+        """
+    assert "stats-lock" in rules_of(bad)
+    good = """
+        class F:
+            def get(self, key):
+                with self._stats_lock:
+                    self.gets += 1
+        """
+    assert "stats-lock" not in rules_of(good)
+    # nested objects (store.stats.gets) are the store's own counters, not the
+    # front-end aggregate — out of scope for this rule
+    nested = """
+        class F:
+            def get(self, key):
+                self.stats.gets += 1
+        """
+    assert "stats-lock" not in rules_of(nested)
+
+
+def test_record_then_apply_rule():
+    bad = """
+        class T:
+            # contract: record-then-apply
+            def split(self, at):
+                self.boundaries.insert(1, at)
+                self.metalog.append({})
+        """
+    assert "record-then-apply" in rules_of(bad)
+    missing = """
+        class T:
+            # contract: record-then-apply
+            def split(self, at):
+                self.boundaries.insert(1, at)
+        """
+    assert "record-then-apply" in rules_of(missing)
+    good = """
+        class T:
+            # contract: record-then-apply
+            def split(self, at):
+                self.metalog.append({})
+                self.boundaries.insert(1, at)
+        """
+    assert "record-then-apply" not in rules_of(good)
+
+
+def test_flush_before_record_rule():
+    bad = """
+        class M:
+            # contract: flush-before-record
+            def tick(self, dst):
+                self.metalog.append({})
+                dst.flush_all()
+        """
+    assert "flush-before-record" in rules_of(bad)
+    good = """
+        class M:
+            # contract: flush-before-record
+            def tick(self, dst):
+                dst.flush_all()
+                self.metalog.append({})
+        """
+    assert "flush-before-record" not in rules_of(good)
+
+
+def test_lock_free_hot_path_rule():
+    bad = """
+        class S:
+            # contract: single-threaded
+            def get(self, key):
+                with self._stats_lock:
+                    pass
+        """
+    assert "lock-free-hot-path" in rules_of(bad)
+    good = """
+        class S:
+            # contract: single-threaded
+            def get(self, key):
+                return self.index.get(key)
+        """
+    assert not rules_of(good)
+
+
+def test_exempt_suppresses_rule_but_not_hygiene():
+    exempted = """
+        class F:
+            def get(self, key):
+                # contract: exempt(provably main-thread in this fixture)
+                self.gets += 1
+        """
+    assert "stats-lock" not in rules_of(exempted)
+    empty_reason = """
+        class F:
+            def get(self, key):
+                # contract: exempt()
+                self.reads += 1
+        """
+    assert "contract-annotation" in rules_of(empty_reason)
+
+
+# ---------------------------------------------------------------- fixtures --
+
+
+def _expected_rules(path: pathlib.Path) -> set[str]:
+    out = set()
+    for line in path.read_text().splitlines():
+        if "# lint-expect:" in line:
+            out.add(line.split("# lint-expect:", 1)[1].strip())
+    return out
+
+
+@pytest.mark.parametrize(
+    "path",
+    sorted((FIXTURES / "lint_bad").glob("*.py")),
+    ids=lambda p: p.stem,
+)
+def test_bad_fixture_flags_exactly_its_planted_rules(path):
+    expected = _expected_rules(path)
+    assert expected, f"{path} must declare its planted rules via # lint-expect:"
+    got = {v.rule for v in lint_paths([path])}
+    assert got == expected
+
+
+def test_good_fixtures_are_clean():
+    paths = sorted((FIXTURES / "lint_good").glob("*.py"))
+    assert paths
+    assert lint_paths(paths) == []
+
+
+def test_every_rule_has_a_bad_fixture():
+    covered = set()
+    for path in (FIXTURES / "lint_bad").glob("*.py"):
+        covered |= _expected_rules(path)
+    assert covered == {rule.name for rule in RULES}
+
+
+def test_real_tree_is_clean():
+    targets = sorted((REPO / "src" / "repro" / "core").glob("*.py"))
+    targets.append(REPO / "src" / "repro" / "api.py")
+    assert lint_paths(targets) == []
+
+
+# --------------------------------------------------------------------- CLI --
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(LINT_SCRIPT), *args],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = _run_cli()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_self_test_exits_zero():
+    proc = _run_cli("--self-test")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_reports_violations_with_exit_one(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(k, n):\n    return hash(k) % n\n")
+    proc = _run_cli(str(bad))
+    assert proc.returncode == 1
+    assert "no-nondeterminism" in proc.stdout
+
+
+def test_cli_missing_file_exits_two(tmp_path):
+    proc = _run_cli(str(tmp_path / "nope.py"))
+    assert proc.returncode == 2
+
+
+def test_cli_unknown_flag_exits_two():
+    proc = _run_cli("--bogus")
+    assert proc.returncode == 2

@@ -1,0 +1,318 @@
+"""Tests for the lockset race detector (``repro.analysis.racecheck``).
+
+Three layers: the Eraser state machine itself (``LocksetChecker`` /
+``ChecksafeLock`` unit tests), the instrumentation attached to a real engine
+(planted races are flagged, disciplined code is silent, a full async
+range-sharded workload with migration runs report-free), and the engine
+contract (byte-identical stats on/off, ``RaceViolation`` on close, the
+``REPRO_DEBUG_CHECKS`` env switch, and provably-zero overhead when off).
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+import threading
+
+import pytest
+
+import repro.api as api
+from repro.analysis import racecheck
+from repro.analysis.lint import FRONTEND_COUNTERS
+from repro.analysis.racecheck import (
+    ChecksafeLock,
+    LocksetChecker,
+    MONITORED_COUNTERS,
+    RaceReport,
+    RaceViolation,
+)
+from repro.core import StoreConfig
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def open_engine(partitioning="hash:2", execution="async", **kw) -> api.Engine:
+    return api.open(api.EngineConfig(store=small_config(),
+                                     partitioning=partitioning,
+                                     execution=execution, **kw))
+
+
+def in_thread(fn) -> None:
+    t = threading.Thread(target=fn, name="rc-test-worker")
+    t.start()
+    t.join()
+
+
+# ------------------------------------------------------------ ChecksafeLock --
+
+
+def test_checksafe_lock_tracks_holding_thread():
+    lock = ChecksafeLock("t")
+    assert not lock.locked()
+    with lock:
+        assert lock.locked()
+        assert lock in racecheck._held()
+    assert lock not in racecheck._held()
+
+
+def test_checksafe_lock_nonblocking_contended():
+    lock = ChecksafeLock("t")
+    lock.acquire()
+    results = {}
+
+    def attempt():
+        results["ok"] = lock.acquire(blocking=False)
+        results["held"] = lock in racecheck._held()
+
+    in_thread(attempt)
+    lock.release()
+    # the failed acquire must not register in the worker's lockset
+    assert results == {"ok": False, "held": False}
+
+
+def test_checksafe_lock_wraps_existing_lock_once():
+    checker = LocksetChecker()
+    raw = threading.Lock()
+    wrapped = checker.wrap_lock(raw, "outer")
+    assert isinstance(wrapped, ChecksafeLock)
+    assert checker.wrap_lock(wrapped, "again") is wrapped
+
+
+# ----------------------------------------------------------- state machine --
+
+
+def test_single_thread_access_never_reports():
+    checker = LocksetChecker()
+    for _ in range(100):
+        checker.access("v", write=True)
+    assert checker.reports == []
+
+
+def test_unlocked_cross_thread_write_reports_once():
+    checker = LocksetChecker()
+    checker.access("v", write=True)
+    in_thread(lambda: (checker.access("v", write=True),
+                       checker.access("v", write=True)))
+    assert len(checker.reports) == 1
+    (report,) = checker.reports
+    assert report.var == "v" and report.write and report.lockset == ()
+
+
+def test_common_lock_keeps_sharing_silent():
+    checker = LocksetChecker()
+    lock = ChecksafeLock("shared")
+
+    def bump():
+        with lock:
+            checker.access("v", write=True)
+
+    bump()
+    in_thread(bump)
+    assert checker.reports == []
+
+
+def test_disjoint_locks_are_not_synchronization():
+    checker = LocksetChecker()
+    a, b = ChecksafeLock("a"), ChecksafeLock("b")
+    with a:
+        checker.access("v", write=True)
+
+    def other():
+        with b:
+            checker.access("v", write=True)
+
+    in_thread(other)
+    # Eraser refines the candidate set on each access: after the second
+    # thread it is {b}; the next access under {a} empties it -> report
+    with a:
+        checker.access("v", write=True)
+    assert len(checker.reports) == 1
+
+
+def test_shared_reads_alone_do_not_report():
+    checker = LocksetChecker()
+    checker.access("v", write=False)
+    in_thread(lambda: checker.access("v", write=False))
+    assert checker.reports == []
+
+
+def test_barrier_is_a_sequence_point():
+    checker = LocksetChecker()
+    checker.access("v", write=True)
+    checker.barrier()
+    in_thread(lambda: checker.access("v", write=True))
+    assert checker.reports == []  # ordered by the barrier, not a race
+    assert checker.barriers == 1
+
+
+def test_check_coordinator_flags_second_submitter():
+    checker = LocksetChecker()
+    checker.check_coordinator("put_many")
+    checker.check_coordinator("put_many")  # same thread: fine
+    in_thread(lambda: checker.check_coordinator("scan"))
+    assert len(checker.reports) == 1
+    assert checker.reports[0].var == "executor.scan"
+
+
+def test_raise_if_violations():
+    checker = LocksetChecker()
+    checker.raise_if_violations()  # clean: no-op
+    checker.reports.append(RaceReport("v", True, "t", (), "planted"))
+    with pytest.raises(RaceViolation, match="planted"):
+        checker.raise_if_violations()
+
+
+def test_monitored_counters_match_linter_vocabulary():
+    # the dynamic detector and the static linter must police the same set
+    assert MONITORED_COUNTERS == FRONTEND_COUNTERS
+
+
+# ----------------------------------------------------- engine: planted race --
+
+
+def test_planted_unlocked_counter_bump_is_flagged():
+    eng = open_engine(debug_checks=True)
+    store = eng.store
+    in_thread(lambda: store.__setattr__("gets", store.gets + 1))
+    store.gets += 1  # main thread, also unlocked: no common lock
+    checker = eng.race_checker
+    assert any(r.var == "frontend.gets" for r in checker.reports)
+    with pytest.raises(RaceViolation):
+        eng.close()
+
+
+def test_disciplined_twin_is_silent():
+    with open_engine(debug_checks=True) as eng:
+        store = eng.store
+
+        def locked_bump():
+            with store._stats_lock:
+                store.gets += 1
+
+        locked_bump()
+        in_thread(locked_bump)
+        assert eng.race_checker.reports == []
+
+
+# --------------------------------------------------- engine: real workloads --
+
+
+def test_async_range_workload_with_migration_is_race_free():
+    keys = [b"k%05d" % i for i in range(300)]
+    with open_engine(partitioning="range:3", execution="async",
+                     debug_checks=True) as eng:
+        for k in keys:
+            eng.put(k, b"v" + k)
+        for _ in range(8):
+            eng.migration_tick()
+        eng.gc_tick(force=True)
+        for k in keys[::7]:
+            assert eng.get(k) == b"v" + k
+        assert len(eng.scan(b"k00000", 50)) == 50
+        checker = eng.race_checker
+        assert checker.events > 0, "instrumentation never fired"
+        assert checker.barriers > 0, "drain barrier never fired"
+        assert checker.reports == []
+
+
+def test_crash_recover_under_detector():
+    keys = [b"c%04d" % i for i in range(120)]
+    with open_engine(partitioning="range:2", execution="serial",
+                     debug_checks=True) as eng:
+        for k in keys:
+            eng.put(k, k * 3)
+        eng.flush_all()
+        eng.crash()
+        eng.recover()
+        for k in keys:
+            assert eng.get(k) == k * 3
+        assert eng.race_checker.reports == []
+
+
+def _run_workload(eng: api.Engine) -> tuple[list, dict]:
+    out = []
+    for i in range(150):
+        eng.put(b"w%04d" % i, b"x" * (i % 17 + 1))
+    for _ in range(4):
+        eng.migration_tick()
+    for i in range(0, 150, 5):
+        out.append(eng.get(b"w%04d" % i))
+    out.append(eng.scan(b"w0000", 25))
+    eng.gc_tick(force=True)
+    return out, eng.stats()
+
+
+@pytest.mark.parametrize("partitioning,execution",
+                         [("hash:2", "async"), ("range:2", "async"),
+                          ("none", "serial")])
+def test_detector_is_observationally_transparent(partitioning, execution):
+    # identical workload, detector on vs off: results AND stats byte-identical
+    with open_engine(partitioning, execution, debug_checks=False) as eng:
+        plain_out, plain_stats = _run_workload(eng)
+    with open_engine(partitioning, execution, debug_checks=True) as eng:
+        debug_out, debug_stats = _run_workload(eng)
+        assert eng.race_checker.reports == []
+    assert debug_out == plain_out
+    assert debug_stats == plain_stats
+
+
+# -------------------------------------------------------- off means *off* --
+
+
+def test_debug_off_structurally_untouched():
+    with open_engine(debug_checks=False) as eng:
+        assert eng.race_checker is None
+        assert not type(eng.store).__name__.startswith("Checked")
+        assert not isinstance(eng.store._stats_lock, ChecksafeLock)
+        assert "drain" not in vars(eng._executor)
+        assert "_new_store_lock" not in vars(eng._executor)
+
+
+def test_debug_off_never_imports_racecheck(monkeypatch):
+    # the strongest zero-overhead statement: without debug_checks the
+    # detector module is never even imported
+    script = (
+        "import sys\n"
+        "import repro.api as api\n"
+        "from repro.core import StoreConfig\n"
+        "cfg = StoreConfig(l0_capacity=1 << 12, cache_bytes=1 << 15,\n"
+        "                  segment_bytes=1 << 14, chunk_bytes=1 << 11)\n"
+        "with api.open(api.EngineConfig(store=cfg, partitioning='hash:2',\n"
+        "                               execution='async')) as eng:\n"
+        "    for i in range(50):\n"
+        "        eng.put(b'k%03d' % i, b'v')\n"
+        "    assert eng.get(b'k007') == b'v'\n"
+        "assert not any(m.startswith('repro.analysis') for m in sys.modules), \\\n"
+        "    sorted(m for m in sys.modules if m.startswith('repro.analysis'))\n"
+    )
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_env_var_enables_detector(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_CHECKS", "1")
+    with open_engine() as eng:
+        assert eng.race_checker is not None
+    for off in ("", "0", "false", "off"):
+        monkeypatch.setenv("REPRO_DEBUG_CHECKS", off)
+        with open_engine() as eng:
+            assert eng.race_checker is None
+
+
+def test_new_shards_from_splits_are_instrumented():
+    with open_engine(partitioning="range:2", execution="serial",
+                     debug_checks=True) as eng:
+        before = len(eng.store._all_stores())
+        shard = eng.store._new_shard()
+        assert getattr(shard, "_race_wrapped", False), \
+            "shards created after attach must be instrumented too"
+        assert before >= 2

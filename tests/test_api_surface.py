@@ -80,7 +80,8 @@ API_METHODS = {
 }
 
 CONFIG_FIELDS = {
-    "EngineConfig": ["store", "partitioning", "execution", "batch_size", "gc_every"],
+    "EngineConfig": ["store", "partitioning", "execution", "batch_size", "gc_every",
+                     "debug_checks"],
     "PartitioningConfig": [
         "scheme", "shards", "boundaries", "rebalance_window", "split_factor",
         "merge_factor", "min_split_keys", "max_shards", "auto_rebalance",
@@ -101,6 +102,7 @@ CONFIG_DEFAULTS = {
     ("ExecutionConfig", "overlap"): "ideal",
     ("EngineConfig", "batch_size"): None,
     ("EngineConfig", "gc_every"): 0,
+    ("EngineConfig", "debug_checks"): False,
 }
 
 # --------------------------------------------------------------- repro.core
