@@ -65,6 +65,7 @@ SMOKE_BENCHES = [
     ("shard_batch_frontend", lambda emit: bench_shard.main(emit, smoke=True)),
     ("range_vs_hash_sharding", lambda emit: bench_range.main(emit, smoke=True)),
     ("analysis_overhead", lambda emit: bench_analysis.main(emit, smoke=True)),
+    ("checkpoint_substrate", lambda emit: bench_checkpoint.main(emit, smoke=True)),
 ]
 
 

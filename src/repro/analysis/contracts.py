@@ -19,6 +19,10 @@ argument.  Two kinds of marker exist:
     function's first ``metalog.append`` record call.
   - ``flush-before-record`` — the function's first ``flush``/``flush_all``
     call must precede its first durable-record write.
+  - ``rename-before-truncate`` — the function's first ``.truncate(...)``
+    call must follow its first replacement write (``metalog.append`` /
+    ``os.replace`` / ``os.rename``): history may only be dropped after the
+    state it summarized has been durably republished.
   - ``single-threaded`` — a modeled hot path; must stay lock-free.
 
 * **Line-level**: ``exempt(<reason>)`` suppresses every violation reported on
@@ -37,7 +41,8 @@ import re
 import tokenize
 
 FUNCTION_MARKERS = frozenset(
-    ["coordinator-only", "record-then-apply", "flush-before-record", "single-threaded"]
+    ["coordinator-only", "record-then-apply", "flush-before-record",
+     "rename-before-truncate", "single-threaded"]
 )
 LINE_MARKERS = frozenset(["exempt"])
 KNOWN_MARKERS = FUNCTION_MARKERS | LINE_MARKERS

@@ -27,6 +27,12 @@ The rules encode the contracts PRs 1-5 established (see ``docs/analysis.md``):
   ``flush_all`` must precede the first durable-record write (the redo record
   must not cover data that is not yet durable — the PR 1 dangling-pointer
   class of bug).
+* ``rename-before-truncate`` — in annotated functions, the first
+  ``.truncate(...)`` call must follow the first replacement write
+  (``metalog.append``, ``os.replace``/``os.rename``, or
+  ``atomic_write_bytes``): history may only be dropped *after* the state it
+  summarized has been durably republished — a crash between the truncate and
+  the replacement would lose the only copy (the PR 7 snapshot discipline).
 * ``lock-free-hot-path`` — functions annotated ``single-threaded`` are
   modeled hot paths and must not acquire or create locks.
 * ``contract-annotation`` — annotation hygiene: unknown markers and
@@ -284,6 +290,55 @@ class FlushBeforeRecordRule(Rule):
         return out
 
 
+class RenameBeforeTruncateRule(Rule):
+    name = "rename-before-truncate"
+
+    @staticmethod
+    def _replacement_lineno(fn: ast.AST) -> int | None:
+        """Line of the first replacement write: ``*.metalog.append(...)``,
+        ``os.replace``/``os.rename``, or ``atomic_write_bytes(...)``."""
+        best = _record_call_lineno(fn, include_device_writes=False)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            hit = (isinstance(f, ast.Name) and f.id == "atomic_write_bytes")
+            if not hit:
+                hit = (isinstance(f, ast.Attribute) and f.attr in ("replace", "rename")
+                       and isinstance(f.value, ast.Name) and f.value.id == "os")
+            if hit and (best is None or node.lineno < best):
+                best = node.lineno
+        return best
+
+    def check(self, mod: ModuleContracts) -> list[Violation]:
+        out = []
+        for fn in mod.functions_with("rename-before-truncate"):
+            truncate_line = None
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "truncate"):
+                    if truncate_line is None or node.lineno < truncate_line:
+                        truncate_line = node.lineno
+            replacement_line = self._replacement_lineno(fn)
+            if truncate_line is None:
+                out.append(self._v(
+                    mod, fn.lineno,
+                    f"'{fn.name}' is annotated rename-before-truncate but never "
+                    "calls .truncate(...)"))
+            elif replacement_line is None:
+                out.append(self._v(
+                    mod, truncate_line,
+                    f"'{fn.name}' truncates history but writes no replacement "
+                    "(metalog.append / os.replace / atomic_write_bytes): a crash "
+                    "after the truncate loses the only copy"))
+            elif truncate_line < replacement_line:
+                out.append(self._v(
+                    mod, truncate_line,
+                    f"history truncated before the replacement write at line "
+                    f"{replacement_line}: a crash between them loses the only copy"))
+        return out
+
+
 class LockFreeHotPathRule(Rule):
     name = "lock-free-hot-path"
 
@@ -325,6 +380,7 @@ RULES: list[Rule] = [
     StatsLockRule(),
     RecordThenApplyRule(),
     FlushBeforeRecordRule(),
+    RenameBeforeTruncateRule(),
     LockFreeHotPathRule(),
     AnnotationHygieneRule(),
 ]

@@ -63,9 +63,12 @@ warn once per process and delegate unchanged (``tests/test_deprecations.py``).
 from __future__ import annotations
 
 import dataclasses
+import io
+import json
 import os
 from typing import Iterable, Iterator as _TypingIterator
 
+from repro.checkpoint.atomic import atomic_write_bytes
 from repro.core import ycsb as _ycsb
 from repro.core.exec import ShardExecutor
 from repro.core.io import overlap_time
@@ -280,6 +283,13 @@ class EngineConfig:
     and a clean :meth:`Engine.close` raises
     :class:`~repro.analysis.racecheck.RaceViolation` if any access raced.
     When off (the default) the detector module is never even imported.
+
+    ``snapshot_dir`` is the default home for :meth:`Engine.snapshot`
+    manifests (``snapshot-<n>.json``; an explicit ``path`` argument always
+    wins).  ``truncate_on_snapshot`` controls whether a snapshot of a
+    range-partitioned engine also truncates the shard-metadata WAL down to
+    the snapshot record (the default — recovery then replays O(delta)
+    records); set it ``False`` to keep the full record history.
     """
 
     store: StoreConfig = dataclasses.field(default_factory=StoreConfig)
@@ -288,6 +298,8 @@ class EngineConfig:
     batch_size: int | None = None
     gc_every: int = 0
     debug_checks: bool = False
+    snapshot_dir: str | None = None
+    truncate_on_snapshot: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "partitioning", PartitioningConfig.parse(self.partitioning))
@@ -309,6 +321,11 @@ class EngineConfig:
             )
         if self.gc_every < 0:
             raise ConfigError(f"gc_every must be >= 0, got {self.gc_every}")
+        if self.snapshot_dir is not None and not isinstance(self.snapshot_dir, str):
+            raise ConfigError(
+                f"snapshot_dir must be a path string or None, "
+                f"got {type(self.snapshot_dir).__name__}"
+            )
         return self
 
     def default_batch_size(self) -> int:
@@ -497,6 +514,7 @@ class Engine:
         config.validate()
         self.config = config
         self._closed = False
+        self._snapshot_seq = 0
         self._store = self._build_store(config)
         self._executor: ShardExecutor | None = None
         if config.execution.mode == "async":
@@ -757,6 +775,185 @@ class Engine:
             self._drain()
         return self._store.space_bytes()
 
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self, path: str | None = None) -> str:
+        """Write a restartable snapshot manifest and return its path.
+
+        The manifest is a JSON document (``format`` 1) holding the engine's
+        config and full logical state — every live row with its LSN, plus
+        range topology and any in-flight migration — captured at a sequence
+        point and published atomically (write-temp/fsync/rename; a crash
+        mid-snapshot leaves the previous manifest intact).  On a
+        range-partitioned engine the capture also appends a ``snapshot``
+        record to the shard-metadata WAL and, when
+        ``config.truncate_on_snapshot`` (the default), truncates the WAL
+        down to that record so recovery replays O(delta) records.
+
+        ``path`` defaults to ``snapshot-<n>.json`` under
+        ``config.snapshot_dir``; with neither set this raises
+        :class:`ConfigError`.  Load with :meth:`restore` (into a live,
+        compatible engine) or module-level :func:`restore` (a fresh engine).
+        """
+        self._check_open()
+        if path is None:
+            if self.config.snapshot_dir is None:
+                raise ConfigError(
+                    "snapshot() needs a destination: pass a path or set "
+                    "EngineConfig.snapshot_dir"
+                )
+            os.makedirs(self.config.snapshot_dir, exist_ok=True)
+            path = os.path.join(
+                self.config.snapshot_dir, f"snapshot-{self._snapshot_seq}.json"
+            )
+            self._snapshot_seq += 1
+        state = self._sequence(self._capture_state)
+        doc = {
+            "format": 1,
+            "config": _jsonable(dataclasses.asdict(self.config)),
+            "state": _jsonable(state),
+        }
+        atomic_write_bytes(path, json.dumps(doc).encode("utf-8"))
+        return path
+
+    def restore(self, path: str) -> None:
+        """Replace this engine's contents with a snapshot manifest's state.
+
+        The snapshot's partitioning scheme must be compatible with this
+        engine's (``range`` only restores into ``range``; a bare store and a
+        1-shard hash fleet interconvert) — :class:`ConfigError` otherwise.
+        Restoring re-roots a range engine's metadata WAL at a fresh snapshot
+        record.  To restore into a *new* engine, use module-level
+        :func:`restore`.
+        """
+        self._check_open()
+        with io.open(path, "rb") as f:
+            doc = json.loads(f.read())
+        if doc.get("format") != 1:
+            raise ConfigError(
+                f"unsupported snapshot format {doc.get('format')!r} in {path}"
+            )
+        state = _from_jsonable(doc["state"])
+        self._sequence(lambda: self._install_state(state))
+
+    def clone(self, **overrides) -> "Engine":
+        """Open an independent engine with this engine's current contents.
+
+        State is captured in memory at a sequence point (no file is
+        written) and installed into a fresh engine built from this config
+        plus ``overrides`` — any :class:`EngineConfig` field except
+        ``partitioning``, which the captured state is keyed to
+        (:class:`ConfigError`; snapshot and reload a fresh fleet to
+        repartition).  The clone shares nothing with the source: subsequent
+        writes on either side are invisible to the other.
+        """
+        self._check_open()
+        if "partitioning" in overrides:
+            raise ConfigError(
+                "clone() cannot change partitioning: the captured state is "
+                "keyed to the source scheme — snapshot() and open a fresh "
+                "engine instead"
+            )
+        state = self._sequence(self._capture_state)
+        eng = Engine(
+            dataclasses.replace(self.config, **overrides) if overrides else self.config
+        )
+        try:
+            eng._sequence(lambda: eng._install_state(state))
+        except BaseException:
+            eng.close(wait=False)
+            raise
+        return eng
+
+    # contract: coordinator-only
+    def _capture_state(self) -> dict:
+        """Capture full logical state (call at a sequence point only)."""
+        store = self._store
+        if isinstance(store, RangeShardedStore):
+            store.snapshot_metadata(truncate=self.config.truncate_on_snapshot)
+            return store.state_snapshot()
+        if isinstance(store, ParallaxStore):
+            return {"kind": "bare", "rows": store.snapshot_rows(), "lsn": store.lsn}
+        return store.state_snapshot()
+
+    # contract: coordinator-only
+    def _install_state(self, state: dict) -> None:
+        """Replace store contents with a captured state (sequence point only)."""
+        store, kind = self._store, state.get("kind")
+        if isinstance(store, RangeShardedStore):
+            if kind != "range":
+                raise ConfigError(
+                    f"cannot restore a {kind!r} snapshot into a "
+                    f"range-partitioned engine"
+                )
+            store.load_state(state)
+            return
+        if isinstance(store, ParallaxStore):
+            # a 1-shard hash capture is op-for-op a bare store
+            if kind == "hash" and len(state["shards"]) == 1:
+                snap = state["shards"][0]
+                state = {"kind": "bare", "rows": snap["rows"], "lsn": snap["lsn"]}
+                kind = "bare"
+            if kind != "bare":
+                raise ConfigError(
+                    f"cannot restore a {kind!r} snapshot into an unpartitioned "
+                    f"serial engine"
+                )
+            fresh = ParallaxStore(dataclasses.replace(self.config.store))
+            fresh.load_rows(state["rows"], state["lsn"])
+            self._store = fresh
+            return
+        # hash fleet (including the 1-shard wrapper behind scheme 'none'+async)
+        if kind == "bare":
+            state = {"kind": "hash",
+                     "shards": [{"rows": state["rows"], "lsn": state["lsn"]}]}
+            kind = "hash"
+        if kind != "hash":
+            raise ConfigError(
+                f"cannot restore a {kind!r} snapshot into a hash-partitioned engine"
+            )
+        try:
+            store.load_state(state)
+        except ValueError as e:
+            raise ConfigError(str(e)) from None
+
+
+# ------------------------------------------------------- snapshot (de)coding
+def _jsonable(obj):
+    """Recursively JSON-encode captured state: ``bytes`` become
+    ``{"__bytes__": <hex>}`` and tuples become lists (state dicts only ever
+    use ``str`` keys, so the bytes marker cannot collide with a real key)."""
+    if isinstance(obj, bytes):
+        return {"__bytes__": obj.hex()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(x) for x in obj]
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    return obj
+
+
+def _from_jsonable(obj):
+    if isinstance(obj, dict):
+        if set(obj) == {"__bytes__"}:
+            return bytes.fromhex(obj["__bytes__"])
+        return {k: _from_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_from_jsonable(x) for x in obj]
+    return obj
+
+
+def _config_from_jsonable(d: dict) -> EngineConfig:
+    """Rebuild an :class:`EngineConfig` from a decoded snapshot manifest."""
+    part = dict(d["partitioning"])
+    if part.get("boundaries") is not None:
+        part["boundaries"] = tuple(part["boundaries"])
+    return EngineConfig(
+        store=StoreConfig(**d["store"]),
+        partitioning=PartitioningConfig(**part),
+        execution=ExecutionConfig(**d["execution"]),
+        **{k: d[k] for k in ("batch_size", "gc_every", "debug_checks",
+                             "snapshot_dir", "truncate_on_snapshot")},
+    )
+
 
 # -------------------------------------------------------------------- driver
 def open(config: EngineConfig | None = None, **overrides) -> Engine:
@@ -775,6 +972,39 @@ def open(config: EngineConfig | None = None, **overrides) -> Engine:
             f"open() takes an EngineConfig (or field overrides), got {type(config).__name__}"
         )
     return Engine(config)
+
+
+def restore(path: str, **overrides) -> Engine:
+    """Open a fresh :class:`Engine` from a snapshot manifest.
+
+    The engine is built from the config recorded in the manifest, with
+    keyword ``overrides`` applied on top — any :class:`EngineConfig` field
+    except ``partitioning``, which the snapshot state is keyed to
+    (:class:`ConfigError`).  The state then installs exactly as
+    :meth:`Engine.restore` would.
+    """
+    if "partitioning" in overrides:
+        raise ConfigError(
+            "restore() cannot change partitioning: the snapshot state is "
+            "keyed to the source scheme"
+        )
+    with io.open(path, "rb") as f:
+        doc = json.loads(f.read())
+    if doc.get("format") != 1:
+        raise ConfigError(
+            f"unsupported snapshot format {doc.get('format')!r} in {path}"
+        )
+    cfg = _config_from_jsonable(_from_jsonable(doc["config"]))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    eng = Engine(cfg)
+    try:
+        state = _from_jsonable(doc["state"])
+        eng._sequence(lambda: eng._install_state(state))
+    except BaseException:
+        eng.close(wait=False)
+        raise
+    return eng
 
 
 def execute(engine: Engine, ops, *, batch_size: int | None = None,
@@ -829,4 +1059,5 @@ __all__ = [
     "execute",
     "open",
     "reset_deprecation_warnings",
+    "restore",
 ]

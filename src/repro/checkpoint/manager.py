@@ -1,7 +1,8 @@
 """Sharded checkpoint manager: pytree <-> LogStructuredCheckpointer.
 
 Each host saves only the array shards it owns (``addressable_shards``); keys
-are ``<tensor path>@<shard index>``.  Restore re-applies NamedShardings via
+are ``<tensor path>@<slice spec>`` (:func:`_idx` — per-dim ``start-stop``
+joined by ``_``, or ``scalar``/``full``).  Restore re-applies NamedShardings via
 ``jax.device_put`` — which makes restoring onto a *different* mesh (elastic
 resize, node loss) pure metadata: the same keys are loaded and re-placed
 under the new mesh's shardings (see repro.elastic).
@@ -38,8 +39,11 @@ class CheckpointManager:
         for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
             key = _path_str(path)
             if hasattr(leaf, "addressable_shards"):
+                # key on the canonical slice spec alone: it identifies the
+                # shard's region exactly, whereas the old replica_id prefix
+                # collapsed distinct tuple-indexed shards onto one key
                 for sh in leaf.addressable_shards:
-                    flat[f"{key}@{sh.index if isinstance(sh.index, int) else sh.replica_id}_{_idx(sh)}"] = np.asarray(sh.data)
+                    flat[f"{key}@{_idx(sh)}"] = np.asarray(sh.data)
             else:
                 flat[f"{key}@full"] = np.asarray(leaf)
         return self.store.save(step, flat, changed=changed)
@@ -83,16 +87,31 @@ def _idx(shard) -> str:
 
 
 def _assemble(parts: dict[str, np.ndarray], shape, dtype) -> np.ndarray:
+    """Reassemble one tensor from its shard parts, verifying full coverage.
+
+    Part keys are the canonical slice specs from :func:`_idx` (the whole
+    post-``@`` token — per-dim ``start-stop`` specs joined by ``_``, or
+    ``scalar`` for 0-d).  Every element must be covered by some part:
+    zero-filling a gap would silently restore a missing shard as zeros, so
+    incomplete coverage raises instead.
+    """
     if "full" in parts:
         return parts["full"].astype(dtype).reshape(shape)
     out = np.zeros(shape, dtype)
+    covered = np.zeros(shape, dtype=bool)
     for key, chunk in parts.items():
-        _, _, idxs = key.partition("_")
         slices = []
-        for dim, spec in zip(range(len(shape)), idxs.split("_")):
+        for dim, spec in zip(range(len(shape)), key.split("_")):
             start_s, _, stop_s = spec.partition("-")
             start = int(start_s)
             stop = shape[dim] if stop_s == "end" else int(stop_s)
             slices.append(slice(start, stop))
         out[tuple(slices)] = chunk.reshape(out[tuple(slices)].shape)
+        covered[tuple(slices)] = True
+    if not covered.all():
+        missing = int(covered.size - covered.sum())
+        raise RuntimeError(
+            f"checkpoint incomplete: shard parts {sorted(parts)} leave "
+            f"{missing} of {covered.size} elements uncovered for shape {tuple(shape)}"
+        )
     return out

@@ -38,6 +38,8 @@ import numpy as np
 from repro.core.io import Device
 from repro.core.model import SizePolicy
 
+from .atomic import atomic_write_bytes
+
 MANIFEST_ENTRY = 64  # key path + offset + len + lsn + crc
 
 
@@ -106,11 +108,19 @@ class LogStructuredCheckpointer:
 
     # ----------------------------------------------------------------- writes
     def save(self, step: int, tree: dict[str, np.ndarray], *, changed: set[str] | None = None) -> dict:
-        """Incremental checkpoint: write (changed) tensors + manifest record."""
+        """Incremental checkpoint: write (changed) tensors + manifest record.
+
+        Both new segment files are published atomically (buffered in full,
+        then write-temp/fsync/rename) and the manifest append is fsync'd, so
+        a crash mid-save leaves either no trace of the step or complete
+        payload files — never a torn segment a later restore would trip on
+        (a torn manifest *tail* is fine: restore stops at the last durable
+        record, and its payload files were renamed into place first).
+        """
         manifest_records = []
-        seg_f = None
+        seg_buf = bytearray()
         seg_id = None
-        tseg_f = None
+        tseg_buf = bytearray()
         tseg_id = None
         for key in sorted(tree):
             if changed is not None and key not in changed and key in self.index:
@@ -127,35 +137,33 @@ class LogStructuredCheckpointer:
                 e = _Entry(self.lsn, step, "inline", payload=payload)
                 self.device.sequential_write(len(payload) + MANIFEST_ENTRY, 1 << 18, kind="log")
             elif kind == "log":
-                if seg_f is None:
+                if seg_id is None:
                     seg_id = self._next_seg
                     self._next_seg += 1
-                    seg_f = open(os.path.join(self.dir, f"seg-{seg_id}.log"), "wb")
-                off = seg_f.tell()
-                seg_f.write(payload)
+                off = len(seg_buf)
+                seg_buf += payload
                 e = _Entry(self.lsn, step, "log", segment=seg_id, offset=off, length=len(payload))
                 self._seg_live[seg_id] = self._seg_live.get(seg_id, 0) + len(payload)
                 self._seg_size[seg_id] = self._seg_size.get(seg_id, 0) + len(payload)
                 self.device.sequential_write(len(payload), 1 << 18, kind="log")
             else:  # transient
-                if tseg_f is None:
+                if tseg_id is None:
                     tseg_id = self._next_tseg
                     self._next_tseg += 1
-                    tseg_f = open(os.path.join(self.dir, f"tseg-{tseg_id}.log"), "wb")
-                off = tseg_f.tell()
-                tseg_f.write(payload)
+                off = len(tseg_buf)
+                tseg_buf += payload
                 e = _Entry(self.lsn, step, "transient", segment=tseg_id, offset=off, length=len(payload))
                 self._tseg_entries[tseg_id] = self._tseg_entries.get(tseg_id, 0) + 1
                 self.device.sequential_write(len(payload), 1 << 18, kind="log")
             self.index[key] = e
             manifest_records.append(_manifest_row(key, e))
-        if seg_f:
-            seg_f.close()
-        if tseg_f:
-            tseg_f.close()
-        with open(os.path.join(self.dir, "MANIFEST"), "a") as mf:
-            for r in manifest_records:
-                mf.write(json.dumps(r) + "\n")
+        # payloads become durable before the manifest records that point at
+        # them (flush-before-record, file edition)
+        if seg_id is not None:
+            atomic_write_bytes(os.path.join(self.dir, f"seg-{seg_id}.log"), bytes(seg_buf))
+        if tseg_id is not None:
+            atomic_write_bytes(os.path.join(self.dir, f"tseg-{tseg_id}.log"), bytes(tseg_buf))
+        self._append_manifest(manifest_records)
         self.device.sequential_write(len(manifest_records) * MANIFEST_ENTRY, 4096, kind="log")
         self._steps_since_consolidate += 1
         stats = {"written": len(manifest_records), "step": step}
@@ -165,34 +173,59 @@ class LogStructuredCheckpointer:
         self.gc_tick()
         return stats
 
+    def _append_manifest(self, rows: list[dict]) -> None:
+        """Durably append manifest records (fsync'd group commit).
+
+        A crash can still tear the appended *tail* — that is the torn-tail
+        window restore's JSON replay tolerates by design — but an acked save
+        is never lost, and the rows land only after their payload files were
+        atomically renamed into place.
+        """
+        if not rows:
+            return
+        with open(os.path.join(self.dir, "MANIFEST"), "a") as mf:
+            for r in rows:
+                mf.write(json.dumps(r) + "\n")
+            mf.flush()
+            os.fsync(mf.fileno())
+
     # ----------------------------------------------- last-level consolidation
     def consolidate(self, step: int) -> None:
         """The 'last-level compaction': rewrite live state into gen-<step>,
         reclaim ALL transient segments wholesale (no GC walk), and start a
-        fresh manifest."""
+        fresh manifest.
+
+        Rename-before-truncate ordering: the generation file and the rewritten
+        MANIFEST are each published atomically (temp/fsync/rename), and only
+        after the new MANIFEST is in place are the transient segments and old
+        generations it no longer references destroyed.  A crash anywhere
+        leaves either the old MANIFEST (pointing at still-present old files)
+        or the new one (pointing at the complete new generation).
+        """
         gen_dir = os.path.join(self.dir, f"gen-{step}")
         os.makedirs(gen_dir, exist_ok=True)
         rows = []
-        with open(os.path.join(gen_dir, "data.bin"), "wb") as df:
-            for key, e in sorted(self.index.items()):
-                payload = self._read_entry(e)
-                if e.kind in ("transient", "gen"):
-                    # merged in place into the (new) generation file; old
-                    # generations are deleted below, so 'gen' entries move too
-                    off = df.tell()
-                    df.write(payload)
-                    self.device.sequential_write(len(payload), 1 << 21, kind="compaction")
-                    ne = _Entry(e.lsn, e.step, "gen", segment=step, offset=off, length=len(payload))
-                else:
-                    # inline stays in the manifest; large stays in the value
-                    # log (its GC handles reclamation)
-                    ne = e
-                self.index[key] = ne
-                rows.append(_manifest_row(key, ne))
-        with open(os.path.join(self.dir, "MANIFEST"), "w") as mf:
-            mf.write(json.dumps({"consolidated": step}) + "\n")
-            for r in rows:
-                mf.write(json.dumps(r) + "\n")
+        data_buf = bytearray()
+        for key, e in sorted(self.index.items()):
+            payload = self._read_entry(e)
+            if e.kind in ("transient", "gen"):
+                # merged in place into the (new) generation file; old
+                # generations are deleted below, so 'gen' entries move too
+                off = len(data_buf)
+                data_buf += payload
+                self.device.sequential_write(len(payload), 1 << 21, kind="compaction")
+                ne = _Entry(e.lsn, e.step, "gen", segment=step, offset=off, length=len(payload))
+            else:
+                # inline stays in the manifest; large stays in the value
+                # log (its GC handles reclamation)
+                ne = e
+            self.index[key] = ne
+            rows.append(_manifest_row(key, ne))
+        atomic_write_bytes(os.path.join(gen_dir, "data.bin"), bytes(data_buf))
+        manifest = [json.dumps({"consolidated": step})]
+        manifest.extend(json.dumps(r) for r in rows)
+        atomic_write_bytes(os.path.join(self.dir, "MANIFEST"),
+                           ("\n".join(manifest) + "\n").encode())
         # wholesale transient reclaim — the paper's zero-GC medium path
         for t in list(self._tseg_entries):
             path = os.path.join(self.dir, f"tseg-{t}.log")
@@ -209,7 +242,15 @@ class LogStructuredCheckpointer:
 
     # --------------------------------------------------------------------- GC
     def gc_tick(self) -> int:
-        """Threshold GC for the large-tensor value log (paper §3.2)."""
+        """Threshold GC for the large-tensor value log (paper §3.2).
+
+        Relocation is rename-before-truncate: each surviving payload is
+        published in a fresh atomically-written segment and its new location
+        durably appended to the MANIFEST *before* the victim segment is
+        unlinked — previously the on-disk manifest kept pointing at the
+        unlinked file, so any restore after a GC of a mixed live/dead
+        segment failed with a missing payload.
+        """
         reclaimed = 0
         live_by_seg: dict[int, list[str]] = {}
         for k, e in self.index.items():
@@ -220,17 +261,21 @@ class LogStructuredCheckpointer:
             if size == 0 or dead / size < self.gc_threshold:
                 continue
             self.device.sequential_read(size, 1 << 21, kind="gc")
+            moved_rows = []
             for k in live_by_seg.get(seg, []):
                 e = self.index[k]
                 payload = self._read_entry(e)
                 nseg = self._next_seg
                 self._next_seg += 1
-                with open(os.path.join(self.dir, f"seg-{nseg}.log"), "wb") as f:
-                    f.write(payload)
+                atomic_write_bytes(os.path.join(self.dir, f"seg-{nseg}.log"), payload)
                 self.device.sequential_write(len(payload), 1 << 18, kind="gc")
-                self.index[k] = _Entry(e.lsn, e.step, "log", segment=nseg, offset=0, length=len(payload))
+                ne = _Entry(e.lsn, e.step, "log", segment=nseg, offset=0, length=len(payload))
+                self.index[k] = ne
                 self._seg_live[nseg] = len(payload)
                 self._seg_size[nseg] = len(payload)
+                moved_rows.append(_manifest_row(k, ne))
+            self._append_manifest(moved_rows)
+            self.device.sequential_write(len(moved_rows) * MANIFEST_ENTRY, 4096, kind="gc")
             path = os.path.join(self.dir, f"seg-{seg}.log")
             if os.path.exists(path):
                 os.unlink(path)
@@ -255,7 +300,24 @@ class LogStructuredCheckpointer:
             return f.read(e.length)
 
     def restore(self) -> tuple[dict[str, np.ndarray], int]:
-        """Replay the manifest (LSN order, tolerating a torn tail)."""
+        """Replay the manifest (LSN order), falling back step by step.
+
+        Two corruption classes are survivable by construction (paper §3.4:
+        recover to a consistent, possibly-not-last, step):
+
+        * a torn manifest *tail* — the JSON replay stops at the last durable
+          record;
+        * a torn or missing *payload file* (e.g. a segment truncated by a
+          crash that predates the atomic-rename discipline) — the replay is
+          retried at descending step cutoffs, dropping the newest step's
+          records each time, until every referenced payload reads back
+          intact.  Earlier rows for the same keys (the previous consistent
+          step) win again, exactly as if the bad step had never been saved.
+
+        Raises ``RuntimeError`` only when no cutoff yields a fully readable
+        tree — e.g. a shard payload deleted outright, which must fail loudly
+        rather than restore zeros.
+        """
         self.index.clear()
         path = os.path.join(self.dir, "MANIFEST")
         rows = []
@@ -266,23 +328,33 @@ class LogStructuredCheckpointer:
                         rows.append(json.loads(line))
                     except json.JSONDecodeError:
                         break  # torn tail: stop at the last durable record
-        step = 0
-        for r in rows:
-            if "consolidated" in r:
-                continue
-            e = _Entry(r["lsn"], r["step"], r["kind"], segment=r.get("segment", -1),
-                       offset=r.get("offset", 0), length=r.get("length", 0))
-            if r["kind"] == "inline":
-                e.payload = bytes.fromhex(r["payload"])
-            self.index[r["key"]] = e
-            step = max(step, r["step"])
-        out = {}
-        for k, e in self.index.items():
+        data_rows = [r for r in rows if "consolidated" not in r]
+        cutoffs = sorted({r["step"] for r in data_rows}, reverse=True) or [0]
+        first_err: tuple[str, Exception] | None = None
+        for cutoff in cutoffs:
+            index: dict[str, _Entry] = {}
+            step = 0
+            for r in data_rows:
+                if r["step"] > cutoff:
+                    continue
+                e = _Entry(r["lsn"], r["step"], r["kind"], segment=r.get("segment", -1),
+                           offset=r.get("offset", 0), length=r.get("length", 0))
+                if r["kind"] == "inline":
+                    e.payload = bytes.fromhex(r["payload"])
+                index[r["key"]] = e
+                step = max(step, r["step"])
+            out = {}
             try:
-                out[k] = _unmeta(self._read_entry(e))
-            except (FileNotFoundError, ValueError):
-                raise RuntimeError(f"checkpoint corrupt: missing payload for {k}")
-        return out, step
+                for k, e in index.items():
+                    out[k] = _unmeta(self._read_entry(e))
+            except (FileNotFoundError, ValueError, struct.error) as err:
+                if first_err is None:
+                    first_err = (k, err)
+                continue  # torn/missing payload at this step: fall back one
+            self.index = index
+            return out, step
+        bad = f" for {first_err[0]} ({first_err[1]})" if first_err else ""
+        raise RuntimeError(f"checkpoint corrupt: missing payload{bad}")
 
     # ------------------------------------------------------------------ stats
     def write_amplification(self) -> float:

@@ -31,7 +31,7 @@ from __future__ import annotations
 import threading
 
 from .io import Device
-from .logs import Log, LogEntry
+from .logs import Log, LogEntry, Pointer
 from .lsm import CAT_SMALL
 
 
@@ -53,9 +53,13 @@ class MetadataLog:
 
     Records are plain dicts with a ``"kind"`` field; the log keeps them in
     append order for replay and charges their encoded size to the device
-    (``kind="meta"``).  There is no truncation/compaction — the record stream
-    in these workloads is tiny, and keeping every record means ``replay()``
-    always reconstructs from genesis (the ``init`` record).
+    (``kind="meta"``).  ``replay()`` reconstructs from the oldest retained
+    record — the ``init`` record at genesis, or a ``snapshot`` record once
+    :meth:`truncate` has dropped the prefix it replaces (PR 7): recovery then
+    replays O(delta) records instead of O(history).  Truncation is pure
+    bookkeeping surgery — dropped records are marked dead in their segments
+    and fully-dead non-tail segments are reclaimed; no device traffic is
+    charged (``bytes_appended`` stays monotonic, ``log_bytes`` shrinks).
 
     Background-checkpoint ordering (PR 4): the WAL's correctness rests on
     record order matching protocol-apply order — a ``checkpoint`` committed
@@ -72,6 +76,8 @@ class MetadataLog:
         self.device = device
         self._log = Log(device, "meta", kind="meta")
         self.records: list[dict] = []
+        self._ptrs: list[Pointer] = []  # device slot of each retained record
+        self.total_appended = 0  # monotonic: crash sites survive truncation
         self._crash_after: int | None = None
         self._append_lock = threading.Lock()
 
@@ -82,6 +88,11 @@ class MetadataLog:
     @property
     def bytes_appended(self) -> int:
         return self._log.appended_bytes
+
+    @property
+    def log_bytes(self) -> int:
+        """Bytes of retained (non-reclaimed) segments — shrinks on truncate."""
+        return self._log.total_bytes
 
     # ---------------------------------------------------------------- append
     def append(self, record: dict) -> int:
@@ -98,15 +109,47 @@ class MetadataLog:
                 "totally ordered (append only from executor sequence points)"
             )
         try:
-            if self._crash_after is not None and len(self.records) >= self._crash_after:
-                raise CrashPoint(len(self.records))
+            # crash sites count *appends since genesis* (total_appended), not
+            # retained records — truncation must not renumber armed sites
+            if self._crash_after is not None and self.total_appended >= self._crash_after:
+                raise CrashPoint(self.total_appended)
             payload = _encode(record)
-            self._log.append(LogEntry(len(self.records) + 1, b"", payload, CAT_SMALL))
+            ptr = self._log.append(LogEntry(self.total_appended + 1, b"", payload, CAT_SMALL))
             self._log.flush()  # synchronous commit: an acked record is never lost
             self.records.append(dict(record))
+            self._ptrs.append(ptr)
+            self.total_appended += 1
             return len(self.records) - 1
         finally:
             self._append_lock.release()
+
+    # -------------------------------------------------------------- truncate
+    def truncate(self, upto: int) -> int:
+        """Drop the first ``upto`` retained records; returns how many dropped.
+
+        The caller must have made the remaining stream self-contained first —
+        i.e. ``records[upto]`` is a ``snapshot`` record that replaces the
+        dropped prefix (rename-before-truncate: the replacement is durable
+        *before* the prefix is destroyed; see ``docs/durability.md``).  The
+        surgery is segment bookkeeping only: dropped records are marked dead
+        and segments that end up fully dead (except the append tail) are
+        reclaimed.  No device I/O is charged — crash sites
+        (``total_appended``) and ``bytes_appended`` are unaffected.
+        """
+        if not 0 <= upto <= len(self.records):
+            raise ValueError(
+                f"truncate({upto}) out of range: {len(self.records)} records retained"
+            )
+        if upto == 0:
+            return 0
+        for ptr in self._ptrs[:upto]:
+            self._log.mark_dead(ptr)
+        del self.records[:upto]
+        del self._ptrs[:upto]
+        for seg in self._log.iter_segments():
+            if seg.live_bytes == 0 and seg is not self._log._tail:
+                self._log.reclaim(seg.segment_id)
+        return upto
 
     def replay(self) -> list[dict]:
         """The durable record stream, oldest first (for recovery replay)."""
@@ -116,9 +159,10 @@ class MetadataLog:
     def crash_after(self, n_records: int) -> None:
         """Arm an injected crash: the append of record ``n_records`` raises.
 
-        ``n_records`` counts *all* records since genesis, so a harness that
-        wants to crash at the ``k``-th site of a scenario arms
-        ``crash_after(log.n_records + k)`` before driving it.  Appends below
+        ``n_records`` counts *all appends since genesis* (``total_appended``,
+        which truncation never rewinds), so a harness that wants to crash at
+        the ``k``-th site of a scenario arms
+        ``crash_after(log.total_appended + k)`` before driving it.  Appends below
         the armed site proceed normally; the log stays readable (recovery
         replays the durable prefix).  Disarm with :meth:`disarm`.
         """

@@ -40,8 +40,11 @@ owner, or an earlier copy of the same key) and wins.
 **Persistent shard-metadata WAL.**  Every boundary change, shard
 create/retire and migration checkpoint is a durable
 :class:`~repro.core.metalog.MetadataLog` record (``init`` / ``split_start`` /
-``merge_start`` / ``checkpoint`` / ``finish``), written record-then-apply.
-``recover()`` replays the record stream from genesis to rebuild the boundary
+``merge_start`` / ``checkpoint`` / ``finish`` / ``snapshot``), written
+record-then-apply.  ``recover()`` replays the record stream from its oldest
+retained record — genesis, or the ``snapshot`` record
+:meth:`RangeShardedStore.snapshot_metadata` roots a truncated WAL at (PR 7) —
+to rebuild the boundary
 map, the live shard set and any in-flight :class:`MigrationState`, which then
 resumes (rolls forward) on subsequent ticks — a crash at *any* record site
 leaves a recoverable topology, which ``tests/test_crashpoints.py`` proves by
@@ -574,6 +577,87 @@ class RangeShardedStore(BaseShardedStore):
         if store is not None:
             self._retire_shard_stats(store)
 
+    # -------------------------------------------------------------- snapshots
+    # contract: coordinator-only, flush-before-record, rename-before-truncate
+    def snapshot_metadata(self, *, truncate: bool = True) -> int:
+        """Append a ``snapshot`` record — the whole topology in one record —
+        and (by default) truncate the WAL prefix it replaces.
+
+        Ordering is rename-before-truncate: every shard store is flushed
+        first (the data the record points at is durable before the record),
+        the snapshot record commits synchronously, and only then is the
+        now-redundant prefix destroyed.  A crash *at* the snapshot's record
+        site therefore leaves the full old stream — recovery replays from
+        genesis exactly as before — while a crash any time after it replays
+        O(delta): the snapshot record plus whatever followed it.  Returns the
+        snapshot record's index (0 after truncation).
+        """
+        for store in self._all_stores():
+            store.flush_all()
+        m = self._migration
+        idx = self.metalog.append(
+            {
+                "kind": "snapshot",
+                "boundaries": list(self.boundaries),
+                "shards": list(self._shard_ids),
+                "next_shard_id": self._next_shard_id,
+                "migration": None if m is None else dataclasses.asdict(m),
+            }
+        )
+        if truncate:
+            self.metalog.truncate(idx)
+            idx = 0
+        return idx
+
+    def state_snapshot(self) -> dict:
+        """Portable logical state: topology + per-store rows (by shard id).
+
+        Includes the draining source of an in-flight migration and the full
+        :class:`MigrationState`, so a restore resumes the migration exactly
+        where the snapshot caught it.  Used by ``repro.api.Engine.snapshot``
+        / ``clone``; the inverse is :meth:`load_state`.
+        """
+        m = self._migration
+        return {
+            "kind": "range",
+            "boundaries": list(self.boundaries),
+            "shard_ids": list(self._shard_ids),
+            "next_shard_id": self._next_shard_id,
+            "migration": None if m is None else dataclasses.asdict(m),
+            "stores": [
+                [sid, {"rows": store.snapshot_rows(), "lsn": store.lsn}]
+                for sid, store in sorted(self._by_id.items())
+            ],
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Replace this store's contents with a :meth:`state_snapshot`.
+
+        Builds fresh shard stores (tombstone fences installed *before* rows
+        load, so a migration destination's post-epoch tombstones survive
+        compaction during the load), installs the topology and in-flight
+        migration, and roots the metadata WAL at a fresh truncated snapshot
+        record — the restored store recovers without the donor's history.
+        """
+        if state.get("kind") != "range":
+            raise ValueError(f"expected a range-store state, got {state.get('kind')!r}")
+        m = state["migration"]
+        migration = None if m is None else MigrationState(**m)
+        by_id: dict[int, ParallaxStore] = {}
+        for sid, snap in state["stores"]:
+            store = self._new_shard()
+            store.pin_tombstones = migration is not None and sid == migration.dst_id
+            store.load_rows(snap["rows"], snap["lsn"])
+            by_id[sid] = store
+        self.boundaries = list(state["boundaries"])
+        self._shard_ids = list(state["shard_ids"])
+        self._by_id = by_id
+        self.shards = [by_id[sid] for sid in self._shard_ids]
+        self._migration = migration
+        self._next_shard_id = max(state["next_shard_id"], max(by_id, default=-1) + 1)
+        self.snapshot_metadata(truncate=True)
+        self._window_base = self._op_counts()
+
     # --------------------------------------------------------------- recovery
     def recover(self) -> None:
         """Rebuild topology + in-flight migration from the metadata WAL, then
@@ -596,11 +680,20 @@ class RangeShardedStore(BaseShardedStore):
         boundaries: list[bytes] = []
         ids: list[int] = []
         migration: MigrationState | None = None
+        snap_next = 0
         for rec in self.metalog.replay():
             kind = rec["kind"]
             if kind == "init":
                 boundaries = list(rec["boundaries"])
                 ids = list(rec["shards"])
+            elif kind == "snapshot":
+                # a full-state reset mid-stream: after truncation this is
+                # records[0] and replay proceeds from here instead of genesis
+                boundaries = list(rec["boundaries"])
+                ids = list(rec["shards"])
+                m = rec["migration"]
+                migration = None if m is None else MigrationState(**m)
+                snap_next = max(snap_next, rec["next_shard_id"])
             elif kind == "split_start":
                 pos = ids.index(rec["src"])
                 boundaries.insert(pos + 1, rec["at"])
@@ -636,7 +729,7 @@ class RangeShardedStore(BaseShardedStore):
         # the destination of the in-flight migration, if any, is pinned
         for sid, store in self._by_id.items():
             store.pin_tombstones = migration is not None and sid == migration.dst_id
-        self._next_shard_id = max(self._next_shard_id, max(live, default=0) + 1)
+        self._next_shard_id = max(self._next_shard_id, snap_next, max(live, default=0) + 1)
         self._window_base = self._op_counts()
 
     # ------------------------------------------------------------------ stats
@@ -647,7 +740,8 @@ class RangeShardedStore(BaseShardedStore):
         return total
 
     def space_bytes(self) -> int:
-        return super().space_bytes() + self.metalog.bytes_appended
+        # retained WAL bytes, not lifetime-appended: truncation reclaims space
+        return super().space_bytes() + self.metalog.log_bytes
 
     def device_time(self, policy: str = "ideal") -> float:
         """Shard devices combined under the overlap policy, plus the metadata

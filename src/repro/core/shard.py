@@ -223,6 +223,36 @@ class BaseShardedStore:
         for s in self._all_stores():
             s.recover()
 
+    # -------------------------------------------------------------- snapshots
+    def state_snapshot(self) -> dict:
+        """Portable logical state: one row capture per shard, in shard order.
+
+        Hash routing is positional, so the capture is meaningful only for a
+        front-end with the *same* shard count — :meth:`load_state` enforces
+        that.  Adaptive front-ends (range) override both methods with their
+        topology-carrying form.
+        """
+        return {
+            "kind": "hash",
+            "shards": [{"rows": s.snapshot_rows(), "lsn": s.lsn} for s in self.shards],
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Replace every shard's contents with a :meth:`state_snapshot`."""
+        if state.get("kind") != "hash":
+            raise ValueError(f"expected a hash-store state, got {state.get('kind')!r}")
+        snaps = state["shards"]
+        if len(snaps) != len(self.shards):
+            raise ValueError(
+                f"state has {len(snaps)} shards, this front-end has {len(self.shards)}"
+            )
+        shards = []
+        for snap in snaps:
+            s = self._new_shard()
+            s.load_rows(snap["rows"], snap["lsn"])
+            shards.append(s)
+        self.shards = shards
+
     # ------------------------------------------------------------------ stats
     def aggregate_stats(self) -> StoreStats:
         total = dataclasses.replace(self.retired_stats)

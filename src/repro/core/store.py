@@ -681,6 +681,40 @@ class ParallaxStore:
             self.l0_bytes += entry.logical_size()
             self.lsn = max(self.lsn, lsn)
 
+    # ------------------------------------------------------------- snapshots
+    def snapshot_rows(self) -> list[tuple[bytes, bytes, int, bool]]:
+        """Newest row per key — ``(key, value, lsn, tombstone)``, sorted by key.
+
+        The store's logical content for :meth:`load_rows`: tombstones and
+        original LSNs are preserved because a migration destination's
+        post-epoch tombstones (and the epoch fence itself) are part of the
+        state a snapshot must carry.  Values resident in a log are read
+        through the normal charged path (a backup pays to read its data);
+        the index walk itself is free, like :meth:`newest_entries`.
+        """
+        rows: list[tuple[bytes, bytes, int, bool]] = []
+        for key, e in sorted(self.newest_entries(b"", None).items()):
+            value = b"" if e.tombstone else self._value_of(e)
+            rows.append((key, value, e.lsn, e.tombstone))
+        return rows
+
+    def load_rows(self, rows: list[tuple[bytes, bytes, int, bool]], lsn: int = 0) -> None:
+        """Load a :meth:`snapshot_rows` capture into this (fresh) store.
+
+        Rows are written in ascending-LSN order and each write is pinned to
+        its original LSN.  Ordering is load-bearing: a flush mid-load sets
+        ``compacted_lsn`` to the run's max LSN, and :meth:`recover` skips
+        entries at or below it — loading out of LSN order would silently
+        drop rows after a later crash/recover.  Everything is flushed at the
+        end, and the LSN counter lands at ``max(row lsns, lsn)`` so epoch
+        fences and future writes behave exactly as in the source store.
+        """
+        for key, value, row_lsn, tombstone in sorted(rows, key=lambda r: r[2]):
+            self.lsn = row_lsn - 1
+            self._write(key, value, tombstone=tombstone, internal=True)
+        self.flush_all()
+        self.lsn = max(self.lsn, lsn)
+
     # ------------------------------------------------------------------ misc
     def amplification(self) -> float:
         app = max(1, self.stats.app_bytes)

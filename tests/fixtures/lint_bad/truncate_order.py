@@ -1,0 +1,14 @@
+"""Planted violation: history truncated before its replacement is durable.
+
+A snapshot may only drop the records it summarizes *after* the snapshot
+itself has been durably published (``metalog.append`` / ``os.replace``).
+Truncating first leaves a crash window with no copy of the state at all.
+"""
+# lint-expect: rename-before-truncate
+
+
+class Coordinator:
+    # contract: rename-before-truncate
+    def snapshot_metadata(self):
+        self.metalog.truncate(3)  # truncate first: wrong
+        self.metalog.append({"kind": "snapshot"})

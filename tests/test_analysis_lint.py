@@ -65,6 +65,7 @@ def test_marker_vocabulary_is_closed():
         "coordinator-only",
         "record-then-apply",
         "flush-before-record",
+        "rename-before-truncate",
         "single-threaded",
     }
 
@@ -191,6 +192,51 @@ def test_flush_before_record_rule():
                 self.metalog.append({})
         """
     assert "flush-before-record" not in rules_of(good)
+
+
+def test_rename_before_truncate_rule():
+    bad = """
+        class C:
+            # contract: rename-before-truncate
+            def snapshot(self):
+                self.metalog.truncate(3)
+                self.metalog.append({})
+        """
+    assert "rename-before-truncate" in rules_of(bad)
+    no_replacement = """
+        class C:
+            # contract: rename-before-truncate
+            def snapshot(self):
+                self.metalog.truncate(3)
+        """
+    assert "rename-before-truncate" in rules_of(no_replacement)
+    never_truncates = """
+        class C:
+            # contract: rename-before-truncate
+            def snapshot(self):
+                self.metalog.append({})
+        """
+    assert "rename-before-truncate" in rules_of(never_truncates)
+    good = """
+        class C:
+            # contract: rename-before-truncate
+            def snapshot(self):
+                self.metalog.append({})
+                self.metalog.truncate(3)
+        """
+    assert "rename-before-truncate" not in rules_of(good)
+    # the file edition: atomic publication (os.replace / atomic_write_bytes)
+    # counts as the replacement write
+    good_file = """
+        import os
+
+        class C:
+            # contract: rename-before-truncate
+            def consolidate(self, tmp, path, fh):
+                os.replace(tmp, path)
+                fh.truncate(0)
+        """
+    assert "rename-before-truncate" not in rules_of(good_file)
 
 
 def test_lock_free_hot_path_rule():

@@ -28,6 +28,7 @@ API_ALL = [
     "execute",
     "open",
     "reset_deprecation_warnings",
+    "restore",
 ]
 
 API_FUNCTIONS = {
@@ -35,12 +36,14 @@ API_FUNCTIONS = {
     "execute": "(engine: 'Engine', ops, *, batch_size: 'int | None' = None, "
                "gc_every: 'int | None' = None, migrate_budget: 'int | None' = None) -> 'dict'",
     "reset_deprecation_warnings": "() -> 'None'",
+    "restore": "(path: 'str', **overrides) -> 'Engine'",
 }
 
 API_METHODS = {
     "Engine": {
         "__init__": "(self, config: 'EngineConfig')",
         "amplification": "(self) -> 'float'",
+        "clone": "(self, **overrides) -> \"'Engine'\"",
         "close": "(self, wait: 'bool' = True) -> 'None'",
         "closed": "<property>",
         "crash": "(self)",
@@ -53,7 +56,9 @@ API_METHODS = {
         "migration_tick": "(self, budget: 'int | None' = None) -> 'int'",
         "put": "(self, key: 'bytes', value: 'bytes') -> 'None'",
         "recover": "(self) -> 'None'",
+        "restore": "(self, path: 'str') -> 'None'",
         "scan": "(self, start: 'bytes', count: 'int') -> 'list[tuple[bytes, bytes]]'",
+        "snapshot": "(self, path: 'str | None' = None) -> 'str'",
         "space_bytes": "(self) -> 'int'",
         "stats": "(self) -> 'dict'",
         "store": "<property>",
@@ -81,7 +86,7 @@ API_METHODS = {
 
 CONFIG_FIELDS = {
     "EngineConfig": ["store", "partitioning", "execution", "batch_size", "gc_every",
-                     "debug_checks"],
+                     "debug_checks", "snapshot_dir", "truncate_on_snapshot"],
     "PartitioningConfig": [
         "scheme", "shards", "boundaries", "rebalance_window", "split_factor",
         "merge_factor", "min_split_keys", "max_shards", "auto_rebalance",
@@ -103,6 +108,8 @@ CONFIG_DEFAULTS = {
     ("EngineConfig", "batch_size"): None,
     ("EngineConfig", "gc_every"): 0,
     ("EngineConfig", "debug_checks"): False,
+    ("EngineConfig", "snapshot_dir"): None,
+    ("EngineConfig", "truncate_on_snapshot"): True,
 }
 
 # --------------------------------------------------------------- repro.core

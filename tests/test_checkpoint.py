@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, _assemble
 from repro.checkpoint.store import LogStructuredCheckpointer
 
 
@@ -60,6 +60,67 @@ def test_torn_manifest_tail(tmp_path):
     out, step = ck.restore()
     assert step == 1
     np.testing.assert_array_equal(out["embed"], state["embed"])
+
+
+def test_torn_payload_falls_back_to_previous_step(tmp_path):
+    """A payload segment truncated mid-write (the pre-atomic-rename failure
+    mode) must not poison restore: it falls back to the previous step whose
+    payloads all read back intact."""
+    # gc_threshold > 1 disables GC so step 0's segment survives as the fallback
+    ck = LogStructuredCheckpointer(str(tmp_path), consolidate_every=100, gc_threshold=1.1)
+    rng = np.random.default_rng(5)
+    state = make_state(rng)
+    ck.save(0, state)
+    prev_embed = state["embed"].copy()
+    state["embed"] = state["embed"] + 1.0
+    ck.save(1, state, changed={"embed"})  # embed lands alone in seg-1.log
+    seg = os.path.join(str(tmp_path), "seg-1.log")
+    with open(seg, "r+b") as f:
+        f.truncate(os.path.getsize(seg) // 2)  # torn in-place write
+    out, step = ck.restore()
+    assert step == 0
+    np.testing.assert_array_equal(out["embed"], prev_embed)
+    np.testing.assert_array_equal(out["ffn_w"], state["ffn_w"])
+
+
+def test_manager_2d_sharded_roundtrip(tmp_path):
+    """Regression: keys are the canonical slice spec alone.  Two shards of a
+    2-D array (distinct regions, distinct replica ids) must round-trip to the
+    exact original — the old replica-prefixed key collapsed tuple-indexed
+    shards onto one entry and the assembler zero-filled the gap silently."""
+
+    class FakeShard:
+        def __init__(self, data, index, replica_id=0):
+            self.data = data
+            self.index = index
+            self.replica_id = replica_id
+
+    class FakeSharded:
+        def __init__(self, arr, shards):
+            self.shape = arr.shape
+            self.dtype = arr.dtype
+            self.addressable_shards = shards
+
+    full = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    shards = [
+        FakeShard(full[0:32, :], (slice(0, 32), slice(0, 64)), replica_id=0),
+        FakeShard(full[32:64, :], (slice(32, 64), slice(0, 64)), replica_id=1),
+    ]
+    mgr = CheckpointManager(str(tmp_path), consolidate_every=100)
+    mgr.save(0, {"w": FakeSharded(full, shards)})
+    out, step = mgr.restore({"w": jax.ShapeDtypeStruct(full.shape, full.dtype)})
+    assert step == 0
+    np.testing.assert_array_equal(out["w"], full)
+
+
+def test_assemble_refuses_partial_coverage():
+    """Regression: a missing shard part must raise, never restore zeros."""
+    half = np.ones((4, 8), np.float32)
+    with pytest.raises(RuntimeError, match="uncovered"):
+        _assemble({"0-4_0-8": half}, (8, 8), np.float32)
+    # the same parts with full coverage assemble fine
+    got = _assemble({"0-4_0-8": half, "4-8_0-8": 2 * half}, (8, 8), np.float32)
+    np.testing.assert_array_equal(got, np.vstack([half, 2 * half]))
 
 
 def test_gc_reclaims_large_segments(tmp_path):

@@ -24,6 +24,8 @@ rarely binding); the ``slow``-marked sweep re-runs the same scenarios at a
 finer migration batch size, which multiplies the checkpoint sites, and
 enumerates **every** one (run it with ``pytest -m slow``).
 """
+import dataclasses
+
 import pytest
 
 from repro.core import RangeShardedStore, StoreConfig
@@ -78,6 +80,25 @@ def scenario_merge(st, model) -> None:
     st.merge(0)
 
 
+def _traffic_round(st, model, round_: int) -> None:
+    """One deterministic round of live application traffic."""
+    # update one soon-migrated and one long-pending key in the moved range
+    for i in (46 + 3 * round_, 88 - 3 * round_):
+        k, v = make_key(i), _value(i, round_)
+        st.update(k, v)
+        model[k] = v
+    # delete one of each as well (tombstones must shadow stale src copies)
+    for i in (48 + 3 * round_, 87 - 3 * round_):
+        k = make_key(i)
+        st.delete(k)
+        model.pop(k, None)
+    # traffic outside the migrating range: a brand-new key and an update
+    for i, fresh in ((100000 + round_, True), (120 + round_, False)):
+        k, v = make_key(i), _value(i, round_)
+        st.put(k, v) if fresh else st.update(k, v)
+        model[k] = v
+
+
 def scenario_mid_migration(st, model) -> None:
     """Background split with application traffic between every tick: writes
     double-route to the new owner, reads must keep agreeing at each site."""
@@ -85,29 +106,33 @@ def scenario_mid_migration(st, model) -> None:
     for round_ in range(50):
         if st.migration is None:
             break
-        # update one soon-migrated and one long-pending key in the moved range
-        for i in (46 + 3 * round_, 88 - 3 * round_):
-            k, v = make_key(i), _value(i, round_)
-            st.update(k, v)
-            model[k] = v
-        # delete one of each as well (tombstones must shadow stale src copies)
-        for i in (48 + 3 * round_, 87 - 3 * round_):
-            k = make_key(i)
-            st.delete(k)
-            model.pop(k, None)
-        # traffic outside the migrating range: a brand-new key and an update
-        for i, fresh in ((100000 + round_, True), (120 + round_, False)):
-            k, v = make_key(i), _value(i, round_)
-            st.put(k, v) if fresh else st.update(k, v)
-            model[k] = v
+        _traffic_round(st, model, round_)
         st.flush_all()       # durable base before the next crash site
         st.migration_tick()  # the crashable step
+
+
+def scenario_snapshot_mid_migration(st, model) -> None:
+    """Like ``mid_migration``, but a coordinator snapshot **with WAL
+    truncation** lands between two migration ticks — the crash sites cover
+    the snapshot append itself (crash there: the full history survives, the
+    truncation never was) and every record appended after the WAL was cut
+    down to the snapshot (crash there: recovery replays the O(delta) tail)."""
+    assert st.split(0, background=True)
+    for round_ in range(50):
+        if st.migration is None:
+            break
+        _traffic_round(st, model, round_)
+        st.flush_all()
+        if round_ == 1:
+            st.snapshot_metadata(truncate=True)  # a crashable record site
+        st.migration_tick()
 
 
 SCENARIOS = {
     "split": (_prelude_none, scenario_split),
     "merge": (_prelude_split, scenario_merge),
     "mid_migration": (_prelude_none, scenario_mid_migration),
+    "snapshot_mid_migration": (_prelude_none, scenario_snapshot_mid_migration),
 }
 
 
@@ -120,12 +145,25 @@ def _fresh(name: str, batch_keys: int):
 
 
 def _site_range(name: str, batch_keys: int) -> tuple[int, int, list[str]]:
-    """(first site, one-past-last site, record kinds) of a clean run."""
+    """(first site, one-past-last site, record kinds) of a clean run.
+
+    Sites are counted in ``total_appended`` — the monotonic append counter
+    ``crash_after`` is armed on — not ``n_records``, which a truncating
+    scenario rewinds.  Kinds are recorded as they are appended for the same
+    reason: slicing ``replay()`` misses records a truncation dropped.
+    """
     st, model, scenario = _fresh(name, batch_keys)
-    base = st.metalog.n_records
+    base = st.metalog.total_appended
+    kinds: list[str] = []
+    inner = st.metalog.append
+
+    def recording_append(record):
+        kinds.append(record["kind"])
+        return inner(record)
+
+    st.metalog.append = recording_append
     scenario(st, model)
-    kinds = [r["kind"] for r in st.metalog.replay()[base:]]
-    return base, st.metalog.n_records, kinds
+    return base, st.metalog.total_appended, kinds
 
 
 def _run_with_crash(name: str, batch_keys: int, site: int):
@@ -179,12 +217,15 @@ def test_scenarios_emit_the_expected_record_sites():
     """Every scenario's WAL stream has a start, >= 3 mid-migration checkpoint
     ticks, and a finish — the sites the sweeps below enumerate."""
     for name, start_kind in (("split", "split_start"), ("merge", "merge_start"),
-                             ("mid_migration", "split_start")):
+                             ("mid_migration", "split_start"),
+                             ("snapshot_mid_migration", "split_start")):
         base, total, kinds = _site_range(name, BATCH_KEYS)
         assert total > base, name
         assert kinds[0] == start_kind, (name, kinds)
         assert kinds[-1] == "finish", (name, kinds)
         assert kinds.count("checkpoint") >= 3, (name, kinds)
+        if name == "snapshot_mid_migration":
+            assert kinds.count("snapshot") == 1, (name, kinds)
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
@@ -217,3 +258,56 @@ def test_crash_at_first_site_means_nothing_happened():
     assert crashed
     assert st.num_shards == 2 and st.migration is None
     _assert_oracle_identical(st, model, "control")
+
+
+def test_post_truncation_recovery_byte_identical_to_genesis():
+    """Truncation is observationally free and recovery is O(delta).
+
+    Two stores are driven through the identical mid-migration workload; both
+    append the snapshot record, but only one truncates its WAL down to it.
+    After crash + recovery + migration drain, every observable — point reads,
+    scans, topology, aggregate :class:`StoreStats`, aggregate
+    :class:`DeviceStats`, appended-WAL bytes — must be byte-identical, the
+    truncated WAL must be exactly the tail of the full-history WAL (rooted at
+    the snapshot record), and it must be strictly shorter: recovery replayed
+    only the post-snapshot delta, not genesis history.
+    """
+
+    def drive(truncate: bool):
+        st, model = build(BATCH_KEYS)
+        assert st.split(0, background=True)
+        for round_ in range(50):
+            if st.migration is None:
+                break
+            _traffic_round(st, model, round_)
+            st.flush_all()
+            if round_ == 1:
+                st.snapshot_metadata(truncate=truncate)
+            st.migration_tick()
+        st.flush_all()
+        st.crash()
+        st.recover()
+        st.drain_migration(max_ticks=10_000)
+        return st, model
+
+    a, model_a = drive(True)    # truncated WAL
+    b, model_b = drive(False)   # full-history WAL
+    assert model_a == model_b
+
+    # O(delta) replay: the truncated stream is a strict tail of the full one,
+    # rooted at the snapshot record
+    ra, rb = a.metalog.replay(), b.metalog.replay()
+    assert ra[0]["kind"] == "snapshot"
+    assert len(ra) < len(rb)
+    assert ra == rb[-len(ra):]
+    assert a.metalog.total_appended == b.metalog.total_appended
+    assert a.metalog.bytes_appended == b.metalog.bytes_appended
+
+    # byte-identical observable state after recovery from either stream
+    _assert_oracle_identical(a, model_a, "truncated")
+    _assert_oracle_identical(b, model_b, "full-history")
+    assert a.boundaries == b.boundaries
+    assert a._shard_ids == b._shard_ids
+    assert a.migration is None and b.migration is None
+    assert dataclasses.asdict(a.aggregate_stats()) == dataclasses.asdict(b.aggregate_stats())
+    assert dataclasses.asdict(a.device_stats()) == dataclasses.asdict(b.device_stats())
