@@ -31,6 +31,7 @@ from . import (
     bench_checkpoint,
     bench_fig1,
     bench_kernels,
+    bench_lifetime,
     bench_loadrun,
     bench_merge,
     bench_model,
@@ -54,6 +55,7 @@ BENCHES = [
     ("checkpoint_substrate", bench_checkpoint.main),
     ("roofline", bench_roofline.main),
     ("analysis_overhead", bench_analysis.main),
+    ("lifetime_placement", bench_lifetime.main),
 ]
 
 
@@ -66,6 +68,7 @@ SMOKE_BENCHES = [
     ("range_vs_hash_sharding", lambda emit: bench_range.main(emit, smoke=True)),
     ("analysis_overhead", lambda emit: bench_analysis.main(emit, smoke=True)),
     ("checkpoint_substrate", lambda emit: bench_checkpoint.main(emit, smoke=True)),
+    ("lifetime_placement", lambda emit: bench_lifetime.main(emit, smoke=True)),
 ]
 
 

@@ -72,6 +72,7 @@ from repro.checkpoint.atomic import atomic_write_bytes
 from repro.core import ycsb as _ycsb
 from repro.core.exec import ShardExecutor
 from repro.core.io import overlap_time
+from repro.core.lifetime import LifetimeConfig
 from repro.core.range_shard import RangeShardedStore
 from repro.core.shard import ShardedStore
 from repro.core.store import ParallaxStore, StoreConfig
@@ -309,6 +310,12 @@ class EngineConfig:
         if not isinstance(self.store, StoreConfig):
             raise ConfigError(
                 f"store must be a repro.core.StoreConfig, got {type(self.store).__name__}"
+            )
+        if self.store.lifetime is not None and self.store.mode != "parallax":
+            raise ConfigError(
+                f"store.lifetime requires mode 'parallax' (lifetime-aware "
+                f"placement splits the hybrid layout's value log), got "
+                f"mode {self.store.mode!r}"
             )
         self.partitioning.validate()
         self.execution.validate()
@@ -718,8 +725,11 @@ class Engine:
         """Namespaced counters: ``engine`` (config identity), ``store``
         (aggregate :class:`StoreStats`), ``device`` (aggregate
         :class:`DeviceStats`), plus ``frontend`` (routing counters) on
-        sharded back-ends and ``topology`` on the range scheme.  Usable after
-        :meth:`close` (post-run reporting)."""
+        sharded back-ends, ``topology`` on the range scheme, and
+        ``lifetime`` (sketch state + per-class log/GC counters; per-shard
+        under ``"shards"`` on sharded back-ends) when
+        ``store.lifetime`` is configured.  Usable after :meth:`close`
+        (post-run reporting)."""
         if not self._closed:
             self._drain()
         store = self._store
@@ -734,10 +744,16 @@ class Engine:
         if isinstance(store, ParallaxStore):
             out["store"] = dataclasses.asdict(store.stats)
             out["device"] = dataclasses.asdict(store.device.stats)
+            lt = store.lifetime_state()
+            if lt is not None:
+                out["lifetime"] = lt
             return out
         out["engine"]["num_shards"] = store.num_shards
         out["store"] = dataclasses.asdict(store.aggregate_stats())
         out["device"] = dataclasses.asdict(store.device_stats())
+        lts = store.lifetime_states()
+        if lts is not None:
+            out["lifetime"] = {"shards": lts}
         out["frontend"] = {
             "scans": store.scans, "scan_probes": store.scan_probes,
             "gets": store.gets, "get_probes": store.get_probes,
@@ -946,8 +962,11 @@ def _config_from_jsonable(d: dict) -> EngineConfig:
     part = dict(d["partitioning"])
     if part.get("boundaries") is not None:
         part["boundaries"] = tuple(part["boundaries"])
+    store = dict(d["store"])
+    if store.get("lifetime") is not None:
+        store["lifetime"] = LifetimeConfig(**store["lifetime"])
     return EngineConfig(
-        store=StoreConfig(**d["store"]),
+        store=StoreConfig(**store),
         partitioning=PartitioningConfig(**part),
         execution=ExecutionConfig(**d["execution"]),
         **{k: d[k] for k in ("batch_size", "gc_every", "debug_checks",

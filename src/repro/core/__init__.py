@@ -25,6 +25,14 @@ Public surface:
   ``crash_after`` fault-injection hook for the crash-point harness)
 * per-level bloom filters (:class:`repro.core.lsm.BloomFilter`) let point
   reads skip levels; skips are counted in ``StoreStats.bloom_skips``
+* :mod:`repro.core.lifetime` — lifetime-aware value placement: the
+  deterministic (crc32-keyed) windowed update-distance sketch
+  (:class:`~repro.core.lifetime.LifetimeSketch`) that splits the Large log
+  into short/long-lived per-class value logs with per-class GC thresholds,
+  the adaptive medium/large cutoff controller
+  (:func:`~repro.core.lifetime.propose_cutoffs`), and the exact test oracle
+  (:class:`~repro.core.lifetime.LifetimeOracle`); enabled via
+  ``StoreConfig(lifetime=LifetimeConfig(...))``
 * :class:`repro.core.exec.ShardExecutor` — async pipelined shard execution:
   per-shard FIFO queues on a thread pool, pipelined batches, background
   GC/migration at sequence points, byte-identical to serial execution
@@ -33,6 +41,14 @@ Public surface:
 """
 from .exec import BatchHandle, ShardExecutor
 from .io import BLOCK, CHUNK, SEGMENT, Device, DeviceStats, overlap_time
+from .lifetime import (
+    CLASS_LONG,
+    CLASS_SHORT,
+    LifetimeConfig,
+    LifetimeOracle,
+    LifetimeSketch,
+    propose_cutoffs,
+)
 from .logs import Log, LogEntry, Pointer, TransientLog
 from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, BloomFilter, IndexEntry, Level
 from .metalog import CrashPoint, MetadataLog
@@ -56,6 +72,8 @@ __all__ = [
     "BatchHandle", "ShardExecutor",
     "Log", "LogEntry", "Pointer", "TransientLog",
     "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
+    "CLASS_SHORT", "CLASS_LONG", "LifetimeConfig", "LifetimeOracle",
+    "LifetimeSketch", "propose_cutoffs",
     "CrashPoint", "MetadataLog",
     "T_ML", "T_SM", "SizePolicy",
     "amplification_inplace", "amplification_inplace_sum", "amplification_separated",

@@ -43,6 +43,11 @@ class DeviceStats:
     log_written: int = 0
     meta_written: int = 0       # shard-metadata WAL records (boundary/migration)
     get_read: int = 0
+    # lifetime-class breakdown (repro.core.lifetime): the short-lived value
+    # log's traffic, *also* included in gc_read/log_written above so the
+    # aggregate counters keep their meaning with lifetime on or off
+    gc_short_read: int = 0      # GC identification reads over short-class logs
+    short_log_written: int = 0  # appends (writes + relocations) to short logs
 
     @property
     def total(self) -> int:
@@ -139,6 +144,9 @@ class Device:
         self.stats.read_ops += ops
         if kind == "gc":
             self.stats.gc_read += nbytes
+        elif kind == "gc_short":
+            self.stats.gc_read += nbytes
+            self.stats.gc_short_read += nbytes
         elif kind == "compaction":
             self.stats.compaction_read += nbytes
         elif kind == "get":
@@ -153,6 +161,9 @@ class Device:
             self.stats.compaction_written += nbytes
         elif kind == "log":
             self.stats.log_written += nbytes
+        elif kind == "short_log":
+            self.stats.log_written += nbytes
+            self.stats.short_log_written += nbytes
         elif kind == "meta":
             self.stats.meta_written += nbytes
 

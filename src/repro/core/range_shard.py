@@ -196,6 +196,22 @@ class RangeShardedStore(BaseShardedStore):
     def _all_stores(self) -> list[ParallaxStore]:
         return list(self._by_id.values())
 
+    def _new_shard(self) -> ParallaxStore:
+        store = super()._new_shard()
+        if store.lifetime is not None:
+            # lifetime-aware shards under the range front-end journal their
+            # adaptive-cutoff cutovers through the metadata WAL instead of
+            # self-applying (record-then-apply; replayed on recovery), and
+            # every value-log segment reclaim is fenced behind a WAL record
+            # so the crash-point harness can enumerate the copy->reclaim
+            # window of a class migration
+            store.cutoff_autonomous = False
+            store.gc_fence = (
+                lambda log_name, segment_id, s=store:
+                self._journal_gc_reclaim(s, log_name, segment_id)
+            )
+        return store
+
     def _register(self, store: ParallaxStore) -> int:
         sid = self._next_shard_id
         self._next_shard_id += 1
@@ -350,10 +366,53 @@ class RangeShardedStore(BaseShardedStore):
     # where ycsb.execute lands) are where migrations advance and, when no
     # migration is in flight, where the skew policy runs
     def _after_batch(self) -> None:
+        self._drain_cutoff_proposals()
         if self._migration is not None:
             self.migration_tick()
         elif self.auto_rebalance:
             self.rebalance_tick()
+
+    # ----------------------------------------------- lifetime cutoff cutover
+    def _sid_of(self, store: ParallaxStore) -> int:
+        for sid, s in self._by_id.items():
+            if s is store:
+                return sid
+        return -1  # unregistered (a split destination pre-record): still fenced
+
+    # contract: flush-before-record
+    def _journal_gc_reclaim(self, store: ParallaxStore, log_name: str, segment_id: int) -> None:
+        """GC fence (installed on lifetime-enabled shards): the store calls
+        this between making its relocations durable and reclaiming the victim
+        segment.  The flush is the class-migration durability barrier —
+        relocated values must never be covered by a record while they are
+        volatile — and the record makes the reclaim a crash-enumerable site:
+        a crash *at* the record leaves both copies, and recovery's newest-LSN
+        replay keeps exactly one winner (zero lost, zero duplicated keys)."""
+        store.flush_all()
+        self.metalog.append(
+            {"kind": "gc_reclaim", "shard": self._sid_of(store),
+             "log": log_name, "segment": segment_id}
+        )
+
+    # contract: coordinator-only, record-then-apply
+    def _apply_cutoffs(self, sid: int, t_sm: float, t_ml: float) -> None:
+        """Durably journal an adaptive-cutoff cutover, then install it.
+
+        Record-then-apply: a crash before the record means the cutover never
+        happened (the store keeps proposing from its ring); a crash after it
+        is replayed by recovery so the shard's placement policy is identical
+        pre- and post-crash."""
+        self.metalog.append({"kind": "cutoff", "shard": sid, "t_sm": t_sm, "t_ml": t_ml})
+        self._by_id[sid].apply_cutoffs(t_sm, t_ml)
+
+    def _drain_cutoff_proposals(self) -> None:
+        """Runs at batch boundaries (sequence points): collect each shard's
+        parked cutoff proposal and commit it through the WAL in shard-id
+        order (deterministic record stream)."""
+        for sid in sorted(self._by_id):
+            proposal = self._by_id[sid].take_cutoff_proposal()
+            if proposal is not None:
+                self._apply_cutoffs(sid, *proposal)
 
     # ------------------------------------------------------------ rebalancing
     def _op_counts(self) -> list[int]:
@@ -602,6 +661,13 @@ class RangeShardedStore(BaseShardedStore):
                 "shards": list(self._shard_ids),
                 "next_shard_id": self._next_shard_id,
                 "migration": None if m is None else dataclasses.asdict(m),
+                # adapted per-shard cutoffs ride the snapshot so truncating
+                # the WAL prefix doesn't forget journaled cutoff cutovers
+                "cutoffs": [
+                    [sid, store.policy.t_sm, store.policy.t_ml]
+                    for sid, store in sorted(self._by_id.items())
+                    if store.lifetime is not None
+                ],
             }
         )
         if truncate:
@@ -681,6 +747,7 @@ class RangeShardedStore(BaseShardedStore):
         ids: list[int] = []
         migration: MigrationState | None = None
         snap_next = 0
+        cutoffs: dict[int, tuple[float, float]] = {}
         for rec in self.metalog.replay():
             kind = rec["kind"]
             if kind == "init":
@@ -694,6 +761,15 @@ class RangeShardedStore(BaseShardedStore):
                 m = rec["migration"]
                 migration = None if m is None else MigrationState(**m)
                 snap_next = max(snap_next, rec["next_shard_id"])
+                for sid, t_sm, t_ml in rec.get("cutoffs", ()):
+                    cutoffs[sid] = (t_sm, t_ml)
+            elif kind == "cutoff":
+                # journaled adaptive-cutoff cutover: last record wins per shard
+                cutoffs[rec["shard"]] = (rec["t_sm"], rec["t_ml"])
+            elif kind == "gc_reclaim":
+                # GC reclaim fence: purely a crash-enumerable sequence point —
+                # the relocations it covers are replayed from the value logs
+                pass
             elif kind == "split_start":
                 pos = ids.index(rec["src"])
                 boundaries.insert(pos + 1, rec["at"])
@@ -729,6 +805,9 @@ class RangeShardedStore(BaseShardedStore):
         # the destination of the in-flight migration, if any, is pinned
         for sid, store in self._by_id.items():
             store.pin_tombstones = migration is not None and sid == migration.dst_id
+            applied = cutoffs.get(sid)
+            if applied is not None and store.lifetime is not None:
+                store.apply_cutoffs(*applied)
         self._next_shard_id = max(self._next_shard_id, snap_next, max(live, default=0) + 1)
         self._window_base = self._op_counts()
 

@@ -296,6 +296,16 @@ class BaseShardedStore:
     def space_bytes(self) -> int:
         return sum(s.space_bytes() for s in self._all_stores())
 
+    def lifetime_states(self) -> list[dict] | None:
+        """Per-shard lifetime/adaptive-cutoff observability (None when the
+        config has no lifetime placement).  Hash shards adapt autonomously —
+        each backing store applies its own cutoff proposals and re-learns
+        them after recovery; the range front-end journals cutovers instead."""
+        states = [s.lifetime_state() for s in self._all_stores()]
+        if all(st is None for st in states):
+            return None
+        return states
+
     def checkpoint_stats(self) -> dict:
         return {
             "num_shards": self.num_shards,

@@ -53,6 +53,7 @@ import zlib
 from typing import Iterable, Iterator
 
 from .io import BLOCK, SEGMENT, Device
+from .lifetime import CLASS_LONG, CLASS_SHORT, LifetimeConfig, LifetimeSketch, propose_cutoffs
 from .logs import Log, LogEntry, Pointer, TransientLog
 from .lsm import CAT_LARGE, CAT_MEDIUM, CAT_SMALL, IndexEntry, Level, merge_runs
 from .model import SizePolicy
@@ -77,6 +78,11 @@ class StoreStats:
     gc_lookups: int = 0         # GC validity lookups (paper 'lookup cost')
     gc_relocations: int = 0     # GC relocations (paper 'cleanup cost')
     compactions: int = 0
+    # lifetime-aware placement (repro.core.lifetime; all zero when disabled)
+    gc_short_lookups: int = 0   # lookup cost paid sweeping short-class logs
+    gc_short_relocations: int = 0   # relocations out of short-class segments
+    class_migrations: int = 0   # GC relocations that changed lifetime class
+    cutoff_adaptations: int = 0  # adaptive t_ml cutovers applied
 
 
 @dataclasses.dataclass
@@ -100,6 +106,9 @@ class StoreConfig:
     bloom_bits_per_key: int = 0          # per-level bloom filters (0 = off, the
                                          # paper's index has none; ShardedStore
                                          # and bench_shard enable 10 bits/key)
+    lifetime: LifetimeConfig | None = None   # lifetime-aware value placement
+                                         # (parallax mode only): short/long
+                                         # value logs + adaptive t_ml cutoff
 
     def policy(self) -> SizePolicy:
         return SizePolicy(t_sm=self.t_sm, t_ml=self.t_ml, prefix_size=self.prefix_size)
@@ -122,8 +131,27 @@ class ParallaxStore:
         self.small_log = Log(self.device, "small")     # WAL for small+medium
         self.medium_log = TransientLog(self.device, "medium")
         self.large_log = Log(self.device, "large")
+        # short-lived value log (lifetime-aware placement, HashKV-style class
+        # grouping): allocation is lazy, so this is free when lifetime is off
+        self.short_log = Log(self.device, "short", kind="short_log")
         self.compacted_lsn = 0                          # catalog high-water mark
-        self._durable: dict[str, int] = {"small": 0, "medium": 0, "large": 0}
+        self._durable: dict[str, int] = {"small": 0, "medium": 0, "large": 0, "short": 0}
+        # lifetime sketch + adaptive-cutoff state.  ``cutoff_autonomous``
+        # stores apply their own proposals (bare store, hash shards:
+        # adaptation is volatile and re-learned after a crash); the
+        # range-sharded front-end flips it off and drains proposals through
+        # its metadata WAL (record-then-apply) so cutovers replay on recovery.
+        self.lifetime = (
+            LifetimeSketch(self.config.lifetime)
+            if self.config.lifetime is not None and self.config.mode == "parallax"
+            else None
+        )
+        self.cutoff_autonomous = True
+        self._cutoff_pending: tuple[float, float] | None = None
+        # optional durability fence between GC's relocation flush and segment
+        # reclaim (the range front-end journals reclaims through it so the
+        # crash-point harness can enumerate the copy->reclaim window)
+        self.gc_fence = None
         self._gc_region: dict[int, int] = {}            # seg offset -> dead bytes (info)
         self._in_gc = False                             # reentrancy guard
         # tombstone fence: while True, last-level compactions keep tombstones
@@ -184,8 +212,17 @@ class ParallaxStore:
         )
         log_entry = LogEntry(self.lsn, key, value, cat, tombstone=tombstone)
         if cat == CAT_LARGE and not tombstone:
-            ptr = self.large_log.append(log_entry)
-            entry.ptr, entry.log = ptr, "large"
+            # lifetime-aware class grouping: hot (short-lived) values go to
+            # the aggressively-GC'd short log, everything else to the large
+            # (long-lived) log.  Internal writes (GC relocation, migration)
+            # re-classify with the *current* sketch — that is the class
+            # migration path: a decayed key demotes to long on relocation.
+            if self.lifetime is not None and self.lifetime.classify(key) == CLASS_SHORT:
+                ptr = self.short_log.append(log_entry)
+                entry.ptr, entry.log = ptr, "short"
+            else:
+                ptr = self.large_log.append(log_entry)
+                entry.ptr, entry.log = ptr, "large"
         else:
             # small / medium / tombstone: WAL to Small log, value rides in L0
             self.small_log.append(log_entry)
@@ -196,15 +233,30 @@ class ParallaxStore:
             self.l0_bytes -= old.logical_size()
         self.l0[key] = entry
         self.l0_bytes += entry.logical_size()
+        if self.lifetime is not None and not internal and not tombstone:
+            # feed the sketch with application writes only — GC relocations
+            # and migration copies are system work and must not look like
+            # user updates (a relocated cold key is still cold)
+            self.lifetime.observe(key, self.lsn)
+            cfg = self.config.lifetime
+            if cfg.adaptive and self.lsn % cfg.adapt_every == 0:
+                self._propose_cutoffs()
         if self.l0_bytes >= self.config.l0_capacity:
             self.flush_l0()
+
+    def _log_of(self, name: str | None) -> Log:
+        if name == "large":
+            return self.large_log
+        if name == "short":
+            return self.short_log
+        return self.medium_log
 
     def _mark_superseded(self, entry: IndexEntry) -> None:
         if entry.ptr is None:
             return
-        log = self.large_log if entry.log == "large" else self.medium_log
+        log = self._log_of(entry.log)
         log.mark_dead(entry.ptr)
-        if entry.log == "large":
+        if entry.log in ("large", "short"):
             seg = log.segments.get(entry.ptr.segment_id)
             if seg is not None:
                 # GC-region bookkeeping: free-space counter keyed by segment
@@ -222,8 +274,9 @@ class ParallaxStore:
         self.l0_bytes = 0
         # the compacted level will reference log offsets, so logs must be
         # durable up to here (paper §3.4: the redo record logs the log offsets
-        # covered by the L0->L1 compaction)
+        # covered by the L0->L1 compaction) — both value-log classes
         self.large_log.flush()
+        self.short_log.flush()
         self._merge_into(0, run, from_l0=True, src_segments=[])
         self.compacted_lsn = max(self.compacted_lsn, max_lsn)
         # WAL reclaim: everything in the Small log is now durable in L1+
@@ -364,8 +417,7 @@ class ParallaxStore:
     def _value_of(self, entry: IndexEntry, kind: str = "get") -> bytes:
         if entry.in_place:
             return entry.value or b""
-        log = self.large_log if entry.log == "large" else self.medium_log
-        return log.read(entry.ptr, kind=kind).value
+        return self._log_of(entry.log).read(entry.ptr, kind=kind).value
 
     # ------------------------------------------------------------------- scan
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
@@ -515,6 +567,56 @@ class ParallaxStore:
                 self.delete(k)
         return len(keys)
 
+    # ------------------------------------------------------ adaptive cutoffs
+    def _propose_cutoffs(self) -> None:
+        """Turn the sketch's distance ring into a t_ml cutover proposal.
+
+        Autonomous stores (bare, hash shards) apply immediately — the adapted
+        policy is volatile and re-learned after recovery.  Under a range
+        front-end (``cutoff_autonomous=False``) the proposal parks in
+        ``_cutoff_pending`` until the coordinator drains it through the
+        shard-metadata WAL (record-then-apply) at a sequence point.
+        """
+        cfg = self.config.lifetime
+        proposal = propose_cutoffs(
+            self.config.policy(), self.lifetime.ring, cfg.window,
+            min_ring=cfg.min_ring, max_shift=cfg.max_shift,
+        )
+        if proposal is None or proposal == (self.policy.t_sm, self.policy.t_ml):
+            return
+        if self.cutoff_autonomous:
+            self.apply_cutoffs(*proposal)
+        else:
+            self._cutoff_pending = proposal
+
+    def apply_cutoffs(self, t_sm: float, t_ml: float) -> None:
+        """Install adapted size cutoffs (instance policy only — the shared
+        ``StoreConfig`` stays the static anchor the controller reasons from)."""
+        self.policy = dataclasses.replace(self.policy, t_sm=t_sm, t_ml=t_ml)
+        self._cutoff_pending = None
+        self.stats.cutoff_adaptations += 1
+
+    def take_cutoff_proposal(self) -> tuple[float, float] | None:
+        proposal, self._cutoff_pending = self._cutoff_pending, None
+        return proposal
+
+    def lifetime_state(self) -> dict | None:
+        """Observability snapshot for the engine's ``lifetime`` stats namespace."""
+        if self.lifetime is None:
+            return None
+        state = self.lifetime.state()
+        state.update(
+            t_sm=self.policy.t_sm,
+            t_ml=self.policy.t_ml,
+            short_log_segments=len(self.short_log.segments),
+            long_log_segments=len(self.large_log.segments),
+            short_log_bytes=self.short_log.total_bytes,
+            long_log_bytes=self.large_log.total_bytes,
+            class_migrations=self.stats.class_migrations,
+            cutoff_adaptations=self.stats.cutoff_adaptations,
+        )
+        return state
+
     # --------------------------------------------------------------------- GC
     def gc_tick(self, force: bool = False) -> int:
         """Large-log GC (parallax, §3.2) or scan-fraction GC (blobdb).
@@ -527,28 +629,51 @@ class ParallaxStore:
             return 0
         if not cfg.auto_gc and not force:
             return 0
+        # victims carry their owning log: with lifetime-aware placement the
+        # short-lived class is swept aggressively (segments mostly dead by
+        # the time they fill — relocation is nearly free) while the long
+        # class rides to a much lazier threshold; without it, the single
+        # large log uses the paper's static threshold
+        victims: list[tuple[Log, object]] = []
         segs = [s for s in self.large_log.iter_segments() if s is not self.large_log._tail]
         if cfg.mode == "parallax":
-            victims = [s for s in segs if s.invalid_fraction() >= cfg.gc_threshold]
+            if self.lifetime is not None:
+                lt = cfg.lifetime
+                victims += [(self.large_log, s) for s in segs
+                            if s.invalid_fraction() >= lt.long_gc_threshold]
+                victims += [
+                    (self.short_log, s)
+                    for s in self.short_log.iter_segments()
+                    if s is not self.short_log._tail
+                    and s.invalid_fraction() >= lt.short_gc_threshold
+                ]
+            else:
+                victims = [(self.large_log, s) for s in segs
+                           if s.invalid_fraction() >= cfg.gc_threshold]
         else:  # blobdb: scan the oldest fraction of the log after compaction
             segs.sort(key=lambda s: s.segment_id)
             n = max(1, int(len(segs) * cfg.blobdb_scan_fraction)) if segs else 0
-            victims = segs[:n]
+            victims = [(self.large_log, s) for s in segs[:n]]
         reclaimed = 0
         self._in_gc = True
         try:
-            for seg in victims:
+            for log, seg in victims:
+                short = log is self.short_log
                 # (1) identify: scan the segment + one index lookup per KV
-                self.device.sequential_read(seg.used_bytes, self.device.segment_bytes, kind="gc")
+                self.device.sequential_read(seg.used_bytes, self.device.segment_bytes,
+                                            kind="gc_short" if short else "gc")
                 live: list[LogEntry] = []
                 for slot, le in enumerate(seg.entries):
                     if le is None:
                         continue
                     self.stats.gc_lookups += 1
+                    if short:
+                        self.stats.gc_short_lookups += 1
                     cur = self._lookup_for_gc(le.key)
                     if (
                         cur is not None
                         and cur.ptr is not None
+                        and cur.log == log.name
                         and cur.ptr.segment_id == seg.segment_id
                         and cur.ptr.slot == slot
                         and not cur.tombstone
@@ -558,18 +683,34 @@ class ParallaxStore:
                     # nothing to clean: identification cost only (paper Fig. 1 —
                     # pure-insert loads pay lookups but relocate nothing)
                     continue
-                # (2) relocate: re-put valid pairs (paper: 'via a put operation')
+                # (2) relocate: re-put valid pairs (paper: 'via a put operation').
+                # The re-put reclassifies against the *current* sketch/policy,
+                # so this is also the class-migration path (demotion of decayed
+                # short keys, promotion of heated-up long keys).
                 for le in live:
                     self.stats.gc_relocations += 1
+                    if short:
+                        self.stats.gc_short_relocations += 1
                     self._write(le.key, le.value, tombstone=False, internal=True)
+                    if self.lifetime is not None:
+                        moved = self.l0.get(le.key)
+                        if moved is not None and moved.log != log.name:
+                            self.stats.class_migrations += 1
                 if live:
                     # durability barrier: relocations must be durable before
                     # the victim segment is freed, else a crash would expose
                     # the shadowed level entries whose pointers dangle into
-                    # the reclaimed segment
+                    # the reclaimed segment.  A relocation may land in any
+                    # class log, so all of them flush.
                     self.small_log.flush()
                     self.large_log.flush()
-                self.large_log.reclaim(seg.segment_id)
+                    self.short_log.flush()
+                if self.gc_fence is not None:
+                    # front-end fence between copy-durable and reclaim (the
+                    # range store journals the reclaim here; a crash at the
+                    # fence leaves both copies and recovery keeps newest-LSN)
+                    self.gc_fence(log.name, seg.segment_id)
+                log.reclaim(seg.segment_id)
                 self._gc_region.pop(seg.offset, None)
                 reclaimed += 1
         finally:
@@ -590,8 +731,9 @@ class ParallaxStore:
     def flush_all(self) -> None:
         self.small_log.flush()
         self.large_log.flush()
+        self.short_log.flush()
         self.medium_log.flush()
-        for log in (self.small_log, self.large_log, self.medium_log):
+        for log in (self.small_log, self.large_log, self.short_log, self.medium_log):
             if log.segments:
                 mx = max(
                     (e.lsn for s in log.segments.values() for e in s.entries if e is not None),
@@ -611,7 +753,7 @@ class ParallaxStore:
         self.l0.clear()
         self.l0_bytes = 0
         first_lost = None
-        for log in (self.small_log, self.large_log):
+        for log in (self.small_log, self.large_log, self.short_log):
             cutoff = self._durable_lsn(log)
             for seg in log.iter_segments():
                 for slot, e in enumerate(seg.entries):
@@ -652,26 +794,27 @@ class ParallaxStore:
         is a consistent prefix of the write history.
         """
         cutoff = getattr(self, "_recovery_cutoff", self.lsn)
-        replay: list[tuple[int, LogEntry, Pointer | None]] = []
+        replay: list[tuple[int, LogEntry, tuple[str, Pointer] | None]] = []
         for seg in self.small_log.iter_segments():
             for e in seg.entries:
                 if e is not None and self.compacted_lsn < e.lsn <= cutoff:
                     replay.append((e.lsn, e, None))
-        for seg in self.large_log.iter_segments():
-            for slot, e in enumerate(seg.entries):
-                if e is not None and self.compacted_lsn < e.lsn <= cutoff:
-                    replay.append((e.lsn, e, Pointer(seg.segment_id, slot)))
+        for logname, vlog in (("large", self.large_log), ("short", self.short_log)):
+            for seg in vlog.iter_segments():
+                for slot, e in enumerate(seg.entries):
+                    if e is not None and self.compacted_lsn < e.lsn <= cutoff:
+                        replay.append((e.lsn, e, (logname, Pointer(seg.segment_id, slot))))
         replay.sort(key=lambda t: t[0])
         self.l0.clear()
         self.l0_bytes = 0
-        for lsn, le, ptr in replay:
+        for lsn, le, located in replay:
             self.device.random_read(lsn % (1 << 30), le.size, kind="get")
             entry = IndexEntry(
                 key=le.key, lsn=lsn, category=le.category, tombstone=le.tombstone,
                 kv_size=len(le.key) + len(le.value),
             )
-            if ptr is not None:
-                entry.ptr, entry.log = ptr, "large"
+            if located is not None:
+                entry.log, entry.ptr = located
             elif not le.tombstone:
                 entry.value = le.value
             old = self.l0.get(le.key)
@@ -722,7 +865,8 @@ class ParallaxStore:
 
     def space_bytes(self) -> int:
         level_bytes = sum(l.index_bytes for l in self.levels)
-        log_bytes = self.small_log.total_bytes + self.medium_log.total_bytes + self.large_log.total_bytes
+        log_bytes = (self.small_log.total_bytes + self.medium_log.total_bytes
+                     + self.large_log.total_bytes + self.short_log.total_bytes)
         return level_bytes + log_bytes
 
     def checkpoint_stats(self) -> dict:
@@ -734,4 +878,5 @@ class ParallaxStore:
             "l0": len(self.l0),
             "medium_log_segments": len(self.medium_log.segments),
             "large_log_segments": len(self.large_log.segments),
+            "short_log_segments": len(self.short_log.segments),
         }

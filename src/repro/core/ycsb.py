@@ -109,12 +109,29 @@ def _sizes_for(mix: str, rng: np.random.Generator, count: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class Workload:
+    """A YCSB phase.  ``hot_update_frac``/``hot_update_keys`` add an
+    update-distance skew on top of the zipfian key popularity: that fraction
+    of the update ops is redirected to a small working set drawn from the
+    zipf *head* (the already-popular keys), so their inter-update distances
+    collapse — the short-lifetime population the lifetime sketch
+    (:mod:`repro.core.lifetime`) is built to catch.  At the default ``0.0``
+    no extra randomness is drawn and op streams are byte-identical to
+    pre-knob workloads."""
+
     name: str            # e.g. 'load_a'
     mix: str             # e.g. 'SD'
     num_keys: int        # loaded keyspace size
     num_ops: int         # operations to run (for run_* phases)
     seed: int = 7
     scan_len: int = 50
+    hot_update_frac: float = 0.0   # fraction of updates redirected to the hot set
+    hot_update_keys: int = 64      # hot working-set size (clamped to num_keys)
+
+    def __post_init__(self):
+        if not 0.0 <= self.hot_update_frac <= 1.0:
+            raise ValueError(f"hot_update_frac must be in [0, 1], got {self.hot_update_frac}")
+        if self.hot_update_keys < 1:
+            raise ValueError(f"hot_update_keys must be >= 1, got {self.hot_update_keys}")
 
     def load_ops(self) -> Iterator[Op]:
         """The load phase: insert every key once, sizes drawn from the mix."""
@@ -133,13 +150,26 @@ class Workload:
         choices = rng.choice(len(kinds), size=self.num_ops, p=probs)
         keys = zipf.sample(self.num_ops)
         sizes = _sizes_for(self.mix, rng, self.num_ops)
+        # the hot-update stream uses its own generator, drawn ONLY when the
+        # knob is on: the base streams above stay byte-identical regardless
+        hot_u = hot_pick = None
+        if self.hot_update_frac > 0.0:
+            hot_rng = np.random.default_rng(self.seed + 3)
+            hot_u = hot_rng.random(self.num_ops)
+            hot_pick = hot_rng.integers(
+                0, min(self.hot_update_keys, self.num_keys), size=self.num_ops
+            )
         next_insert = self.num_keys
-        for c, k, sz in zip(choices, keys, sizes):
+        for i, (c, k, sz) in enumerate(zip(choices, keys, sizes)):
             kind = kinds[c]
             if kind == "insert":
                 yield Op("insert", make_key(next_insert), int(sz))
                 next_insert += 1
             elif kind == "update":
+                if hot_u is not None and hot_u[i] < self.hot_update_frac:
+                    # hot set = the zipf head ranks, mapped through the same
+                    # rank->key shuffle the zipf sampler uses
+                    k = zipf.perm[hot_pick[i]]
                 yield Op("update", make_key(int(k)), int(sz))
             elif kind == "read":
                 yield Op("read", make_key(int(k)))

@@ -1,0 +1,30 @@
+"""Planted violations: lifetime GC/cutover paths with inverted ordering.
+
+The GC reclaim fence must make relocated values durable *before* the WAL
+record that covers the reclaim (flush-before-record: a crash after the
+record would otherwise point at volatile relocations), and an adaptive
+cutoff cutover must journal the new thresholds *before* installing them
+(record-then-apply: applying first leaves unrecorded placement policy a
+recovery cannot reproduce).  These mirror
+``RangeShardedStore._journal_gc_reclaim`` / ``_apply_cutoffs``.
+"""
+# lint-expect: flush-before-record
+# lint-expect: record-then-apply
+
+
+class LifetimeFrontend:
+    # contract: flush-before-record
+    def journal_gc_reclaim(self, store, log_name, segment_id):
+        self.metalog.append(
+            {"kind": "gc_reclaim", "log": log_name, "segment": segment_id}
+        )  # record first: a crash here covers still-volatile relocations
+        store.flush_all()
+
+    # contract: record-then-apply
+    def apply_cutoffs(self, sid, t_sm, t_ml):
+        self.shards[sid] = (t_sm, t_ml)  # applied before the record: wrong
+        self.metalog.append({"kind": "cutoff", "shard": sid})
+
+    # contract: record-then-apply
+    def autonomous_cutover(self, migration):
+        self._migration = migration  # no record at all: silently applied

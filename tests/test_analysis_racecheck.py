@@ -222,6 +222,38 @@ def test_async_range_workload_with_migration_is_race_free():
         assert checker.reports == []
 
 
+def test_lifetime_gc_and_cutover_race_free():
+    """PR 8 paths under the detector: sketch observation on the write path,
+    short-log placement and per-class GC (with the coordinator's gc_reclaim
+    fence journaling) plus the drained cutoff cutover, on an async range
+    engine — all must close report-free and with the machinery engaged."""
+    from repro.core import LifetimeConfig
+
+    cfg = api.EngineConfig(
+        store=small_config(lifetime=LifetimeConfig(
+            window=128, adapt_every=32, min_ring=8, ring_size=32)),
+        partitioning="range:2", execution="async", debug_checks=True)
+    with api.open(cfg) as eng:
+        hot = [b"k%05d" % i for i in range(16)]
+        for i in range(120):
+            eng.put(b"k%05d" % i, b"v" * 1000)
+        for round_ in range(6):
+            for k in hot:
+                eng.update(k, b"%d" % round_ + b"v" * 1000)
+            eng.flush_all()
+            eng.gc_tick(force=True)
+        for k in hot:
+            assert eng.get(k) == b"5" + b"v" * 1000
+        stats = eng.stats()
+        lt = stats["lifetime"]["shards"]
+        assert sum(s["observed"] for s in lt) > 0
+        assert stats["device"]["short_log_written"] > 0
+        assert sum(s["cutoff_adaptations"] for s in lt) >= 1
+        checker = eng.race_checker
+        assert checker.events > 0, "instrumentation never fired"
+        assert checker.reports == []
+
+
 def test_crash_recover_under_detector():
     keys = [b"c%04d" % i for i in range(120)]
     with open_engine(partitioning="range:2", execution="serial",

@@ -95,6 +95,28 @@ CONFIG_FIELDS = {
     "ExecutionConfig": ["mode", "workers", "pipeline", "pace", "max_pending", "overlap"],
 }
 
+# placement-config snapshots (repro.core dataclasses reachable from
+# EngineConfig.store): StoreConfig is deliberately *not* frozen (legacy call
+# patterns mutate it), LifetimeConfig is frozen (shared across shards)
+STORE_CONFIG_FIELDS = [
+    "mode", "t_sm", "t_ml", "l0_capacity", "growth_factor", "merge_depth",
+    "sorted_segments", "gc_threshold", "blobdb_scan_fraction", "cache_bytes",
+    "auto_gc", "blobdb_gc_every_flushes", "prefix_size", "segment_bytes",
+    "chunk_bytes", "bloom_bits_per_key", "lifetime",
+]
+
+LIFETIME_CONFIG_FIELDS = [
+    "window", "rows", "width", "hot_updates", "ring_size", "adaptive",
+    "adapt_every", "min_ring", "max_shift", "short_gc_threshold",
+    "long_gc_threshold",
+]
+
+LIFETIME_CONFIG_DEFAULTS = {
+    "window": 2048, "rows": 4, "width": 256, "hot_updates": 2,
+    "ring_size": 128, "adaptive": True, "adapt_every": 2048, "min_ring": 32,
+    "max_shift": 0.5, "short_gc_threshold": 0.5, "long_gc_threshold": 0.30,
+}
+
 CONFIG_DEFAULTS = {
     ("PartitioningConfig", "scheme"): "none",
     ("PartitioningConfig", "shards"): 1,
@@ -118,6 +140,8 @@ CORE_ALL = [
     "BatchHandle", "ShardExecutor",
     "Log", "LogEntry", "Pointer", "TransientLog",
     "CAT_SMALL", "CAT_MEDIUM", "CAT_LARGE", "BloomFilter", "IndexEntry", "Level",
+    "CLASS_SHORT", "CLASS_LONG", "LifetimeConfig", "LifetimeOracle",
+    "LifetimeSketch", "propose_cutoffs",
     "CrashPoint", "MetadataLog",
     "T_ML", "T_SM", "SizePolicy",
     "amplification_inplace", "amplification_inplace_sum", "amplification_separated",
@@ -185,3 +209,20 @@ def test_core_all_is_exact():
     assert core.__all__ == CORE_ALL
     for name in CORE_ALL:
         assert hasattr(core, name), name
+
+
+def test_store_config_fields():
+    import dataclasses
+
+    assert [f.name for f in dataclasses.fields(core.StoreConfig)] == STORE_CONFIG_FIELDS
+    assert core.StoreConfig().lifetime is None  # lifetime placement is opt-in
+
+
+def test_lifetime_config_fields_and_defaults():
+    import dataclasses
+
+    assert [f.name for f in dataclasses.fields(core.LifetimeConfig)] == LIFETIME_CONFIG_FIELDS
+    assert core.LifetimeConfig.__dataclass_params__.frozen
+    inst = core.LifetimeConfig()
+    for field, expected in LIFETIME_CONFIG_DEFAULTS.items():
+        assert getattr(inst, field) == expected, field

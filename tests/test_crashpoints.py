@@ -28,7 +28,7 @@ import dataclasses
 
 import pytest
 
-from repro.core import RangeShardedStore, StoreConfig
+from repro.core import LifetimeConfig, RangeShardedStore, StoreConfig
 from repro.core.metalog import CrashPoint
 from repro.core.ycsb import make_key, payload
 
@@ -36,6 +36,13 @@ N_KEYS = 180          # 2 shards * 90 keys; a split moves ~45
 BATCH_KEYS = 12       # -> 4 checkpoints per migration (>= 3 mid-migration ticks)
 FINE_BATCH_KEYS = 4   # slow sweep: ~12 checkpoints per migration
 TIER1_SITE_CAP = 7    # ~20 sites across the three scenarios in tier-1
+
+# small lifetime windows so the lifetime scenarios' WAL sites — adaptive
+# cutoff cutovers and GC reclaim fences — fire within a few rounds: the hot
+# rounds cycle ~40 keys, so window//4 must exceed that inter-update distance
+# for the controller's hot fraction (and with it a cutoff proposal) to rise
+_CRASH_LIFETIME = LifetimeConfig(window=256, adapt_every=32, min_ring=8,
+                                 ring_size=32, long_gc_threshold=0.2)
 
 
 def small_config(**kw) -> StoreConfig:
@@ -49,10 +56,16 @@ def _value(i: int, round_: int = -1) -> bytes:
     return (b"%06d/%03d:" % (i, round_)) + payload(104)
 
 
-def build(batch_keys: int) -> tuple[RangeShardedStore, dict[bytes, bytes]]:
+def _lvalue(i: int, round_: int = -1) -> bytes:
+    """A Large-class value (lands in the lifetime-split value logs)."""
+    return (b"%06d/%03d:" % (i, round_)) + payload(1004)
+
+
+def build(batch_keys: int, lifetime: bool = False) -> tuple[RangeShardedStore, dict[bytes, bytes]]:
     keys = [make_key(i) for i in range(N_KEYS)]
+    cfg = small_config(lifetime=_CRASH_LIFETIME) if lifetime else small_config()
     st = RangeShardedStore.for_keys(
-        keys, 2, small_config(), auto_rebalance=False, migration_batch_keys=batch_keys,
+        keys, 2, cfg, auto_rebalance=False, migration_batch_keys=batch_keys,
     )
     model = {k: _value(i) for i, k in enumerate(keys)}
     st.put_many(list(model.items()))
@@ -128,17 +141,60 @@ def scenario_snapshot_mid_migration(st, model) -> None:
         st.migration_tick()
 
 
+def _hot_update_round(st, model, round_: int, n: int = 40) -> None:
+    """Update-heavy round over a hot prefix with Large-class values: builds
+    garbage in the lifetime-split value logs and feeds the sketch/ring."""
+    for i in range(n):
+        k, v = make_key(i), _lvalue(i, round_)
+        st.update(k, v)
+        model[k] = v
+
+
+def scenario_lifetime_gc(st, model) -> None:
+    """Lifetime placement under forced GC: each round's updates strand dead
+    values in the short/long value logs, the flush is the durable base, and
+    the GC tick is the crashable step — its WAL sites are the ``cutoff``
+    cutover records (crash *at* one: the proposal never was; the shard keeps
+    its prior policy) and the ``gc_reclaim`` fences between a class
+    migration's relocation flush and the victim segment's reclaim (crash
+    there: both copies survive and recovery's newest-LSN replay keeps exactly
+    one winner)."""
+    for round_ in range(6):
+        _hot_update_round(st, model, round_)
+        st.flush_all()
+        st.gc_tick(force=True)
+
+
+def scenario_lifetime_mid_migration(st, model) -> None:
+    """Lifetime GC interleaved with an in-flight background split: cutoff /
+    gc_reclaim sites land between migration checkpoints (the tick rides the
+    GC batch boundary), so crashes cover every interleaving of the two
+    protocols' records."""
+    assert st.split(0, background=True)
+    for round_ in range(50):
+        if st.migration is None:
+            break
+        _traffic_round(st, model, round_)
+        _hot_update_round(st, model, round_, n=20)
+        st.flush_all()
+        st.gc_tick(force=True)  # _after_batch also advances the migration
+
+
 SCENARIOS = {
     "split": (_prelude_none, scenario_split),
     "merge": (_prelude_split, scenario_merge),
     "mid_migration": (_prelude_none, scenario_mid_migration),
     "snapshot_mid_migration": (_prelude_none, scenario_snapshot_mid_migration),
+    "lifetime_gc": (_prelude_none, scenario_lifetime_gc),
+    "lifetime_mid_migration": (_prelude_none, scenario_lifetime_mid_migration),
 }
+
+_LIFETIME_SCENARIOS = {"lifetime_gc", "lifetime_mid_migration"}
 
 
 # -------------------------------------------------------------------- harness
 def _fresh(name: str, batch_keys: int):
-    st, model = build(batch_keys)
+    st, model = build(batch_keys, lifetime=name in _LIFETIME_SCENARIOS)
     prelude, scenario = SCENARIOS[name]
     prelude(st, model)
     return st, model, scenario
@@ -228,6 +284,21 @@ def test_scenarios_emit_the_expected_record_sites():
             assert kinds.count("snapshot") == 1, (name, kinds)
 
 
+def test_lifetime_scenarios_emit_cutoff_and_reclaim_sites():
+    """The lifetime scenarios' WAL streams contain both new record kinds —
+    adaptive-cutoff cutovers and GC reclaim fences — and the mid-migration
+    variant interleaves them with migration checkpoints, so the sweeps below
+    enumerate crash sites in the copy->reclaim window and between a cutoff
+    record and its apply."""
+    for name in sorted(_LIFETIME_SCENARIOS):
+        base, total, kinds = _site_range(name, BATCH_KEYS)
+        assert total > base, name
+        assert kinds.count("cutoff") >= 1, (name, kinds)
+        assert kinds.count("gc_reclaim") >= 1, (name, kinds)
+    _, _, kinds = _site_range("lifetime_mid_migration", BATCH_KEYS)
+    assert kinds[0] == "split_start" and kinds.count("checkpoint") >= 3, kinds
+
+
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 def test_crashpoints_tier1_sample(name):
     """Tier-1: crash + recover + resume at a capped sample of record sites
@@ -244,7 +315,10 @@ def test_crashpoints_exhaustive(name):
     """Slow sweep: a finer migration batch multiplies the checkpoint sites;
     enumerate and crash at every single one (plus the no-crash control)."""
     base, total, kinds = _site_range(name, FINE_BATCH_KEYS)
-    assert kinds.count("checkpoint") >= 8, (name, kinds)
+    if name in _LIFETIME_SCENARIOS:
+        assert kinds.count("cutoff") + kinds.count("gc_reclaim") >= 4, (name, kinds)
+    else:
+        assert kinds.count("checkpoint") >= 8, (name, kinds)
     for site in range(base, total + 1):
         crashed = _verify_site(name, FINE_BATCH_KEYS, site)
         assert crashed == (site < total), (name, site)

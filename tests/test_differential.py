@@ -18,8 +18,18 @@ import dataclasses
 import pytest
 
 import repro.api as api
-from repro.core import ParallaxStore, RangeShardedStore, ShardedStore, StoreConfig
+from repro.core import (
+    LifetimeConfig,
+    ParallaxStore,
+    RangeShardedStore,
+    ShardedStore,
+    StoreConfig,
+)
 from repro.core.ycsb import Workload, execute, make_key, payload
+
+# small windows so sketch rotation, cutoff adaptation and per-class GC all
+# engage within a few hundred ops (shared by the stateful machine too)
+LIFETIME_SMALL = LifetimeConfig(window=128, adapt_every=32, min_ring=8, ring_size=32)
 
 
 def small_config(**kw) -> StoreConfig:
@@ -29,9 +39,13 @@ def small_config(**kw) -> StoreConfig:
     return StoreConfig(**defaults)
 
 
-def make_fleet(num_keys: int, num_shards: int = 3, rebalance_window: int = 200, **range_kw):
-    """The three front-ends under differential test, bare store first."""
-    return {
+def make_fleet(num_keys: int, num_shards: int = 3, rebalance_window: int = 200,
+               lifetime_range: bool = False, **range_kw):
+    """The three front-ends under differential test, bare store first.
+    ``lifetime_range=True`` adds a fourth, lifetime-enabled range store: its
+    placement (short/long value logs, adaptive cutoffs) must be invisible to
+    every correctness observable."""
+    fleet = {
         "bare": ParallaxStore(small_config()),
         "hash": ShardedStore(num_shards, small_config(bloom_bits_per_key=10)),
         "range": RangeShardedStore.for_keys(
@@ -40,6 +54,13 @@ def make_fleet(num_keys: int, num_shards: int = 3, rebalance_window: int = 200, 
             rebalance_window=rebalance_window, **range_kw,
         ),
     }
+    if lifetime_range:
+        fleet["range_lt"] = RangeShardedStore.for_keys(
+            [make_key(i) for i in range(num_keys)], num_shards,
+            small_config(bloom_bits_per_key=10, lifetime=LIFETIME_SMALL),
+            rebalance_window=rebalance_window, **range_kw,
+        )
+    return fleet
 
 
 def replay(fleet: dict, ops_factory) -> None:
@@ -368,6 +389,124 @@ def test_engine_snapshot_restore_clone_all_combos(tmp_path):
     finally:
         for eng in list(fleet.values()) + spawned:
             eng.close()
+
+
+# ------------------------------------------------------------------ lifetime
+# Acceptance (lifetime PR): lifetime-aware placement is a *physical* layout
+# change — short/long value-log split, class migrations during GC, adaptive
+# cutoff cutovers — and must be invisible to every correctness observable.
+# Results (gets, scans, key sets) are compared byte-for-byte between lifetime
+# on and off across all six partitioning x execution combos; stats are
+# allowed (expected!) to differ.
+
+def _lifetime_engine_fleet(num_keys: int, lifetime: LifetimeConfig | None) -> dict[str, api.Engine]:
+    keys = [make_key(i) for i in range(num_keys)]
+    part = api.PartitioningConfig.range_for_keys(keys, 3, **RANGE_POLICY)
+    fleet = {}
+    for mode in ("serial", "async"):
+        fleet[f"none-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(lifetime=lifetime), execution=mode))
+        fleet[f"hash-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(bloom_bits_per_key=10, lifetime=lifetime),
+            partitioning="hash:3", execution=mode))
+        fleet[f"range-{mode}"] = api.open(api.EngineConfig(
+            store=small_config(bloom_bits_per_key=10, lifetime=lifetime),
+            partitioning=part, execution=mode))
+    return fleet
+
+
+def test_lifetime_on_vs_off_results_identical_all_combos():
+    """The same update-distance-skewed YCSB streams (hot_update_frac riding
+    the zipf head, LD mix so Large values hit the value logs, periodic GC)
+    through every combo with lifetime on and off: byte-identical gets, scans
+    and key sets — while the lifetime machinery demonstrably engaged."""
+    nk = 500
+    on = _lifetime_engine_fleet(nk, LIFETIME_SMALL)
+    off = _lifetime_engine_fleet(nk, None)
+    streams = [
+        lambda: Workload("load_a", "LD", num_keys=nk, num_ops=0, seed=61).load_ops(),
+        lambda: Workload("run_a", "LD", num_keys=nk, num_ops=600, seed=61,
+                         hot_update_frac=0.6, hot_update_keys=32).run_ops(),
+    ]
+    try:
+        for ops_factory in streams:
+            for eng in list(on.values()) + list(off.values()):
+                api.execute(eng, ops_factory(), batch_size=32, gc_every=100)
+        probe = [make_key(i) for i in range(nk + 50)]
+        oracle_gets = [off["none-serial"].get(k) for k in probe]
+        oracle_scan = off["none-serial"].scan(b"", 2 * nk + 100)
+        for name in on:
+            for fleet, label in ((on, "on"), (off, "off")):
+                eng = fleet[name]
+                assert [eng.get(k) for k in probe] == oracle_gets, (name, label)
+                assert eng.scan(b"", 2 * nk + 100) == oracle_scan, (name, label)
+        # the lifetime machinery really ran: short-log traffic and sketch
+        # observations on every lifetime engine, none on the off fleet
+        for name, eng in on.items():
+            s = eng.stats()
+            assert "lifetime" in s, name
+            shards = s["lifetime"]["shards"] if "shards" in s["lifetime"] else [s["lifetime"]]
+            assert sum(sh["observed"] for sh in shards) > 0, name
+            assert s["device"]["short_log_written"] > 0, name
+        for name, eng in off.items():
+            s = eng.stats()
+            assert "lifetime" not in s, name
+            assert s["device"]["short_log_written"] == 0, name
+        # range engines journaled adaptive cutoffs through the metadata WAL
+        kinds = [r["kind"] for r in on["range-serial"].store.metalog.replay()]
+        assert "cutoff" in kinds
+    finally:
+        for eng in list(on.values()) + list(off.values()):
+            eng.close()
+
+
+def test_lifetime_crash_recover_mid_migration_matches_off():
+    """Crash with both a range migration and lifetime GC in flight: the
+    recovered lifetime engine (replayed cutoff records, re-split value logs)
+    must keep serving byte-identically to its lifetime-off twin through
+    resume and drain."""
+    nk = 400
+    keys = [make_key(i) for i in range(nk)]
+
+    def build(lifetime):
+        part = api.PartitioningConfig.range_for_keys(
+            keys, 3, auto_rebalance=False, migration_batch_keys=1)
+        return api.open(api.EngineConfig(
+            store=small_config(bloom_bits_per_key=10, lifetime=lifetime),
+            partitioning=part))
+
+    on, off = build(LIFETIME_SMALL), build(None)
+    try:
+        load = lambda: Workload("load_a", "LD", num_keys=nk, num_ops=0, seed=71).load_ops()
+        run = lambda s, n: Workload("run_a", "LD", num_keys=nk, num_ops=n, seed=s,
+                                    hot_update_frac=0.6, hot_update_keys=32).run_ops()
+        for eng in (on, off):
+            api.execute(eng, load(), batch_size=32)
+            api.execute(eng, run(72, 300), batch_size=32, gc_every=60)
+            eng.flush_all()
+            st = eng.store
+            hot = max(range(st.num_shards),
+                      key=lambda i: len(st.shards[i].live_keys_in(*st.bounds(i))))
+            assert st.split(hot, background=True)
+            api.execute(eng, run(73, 40), batch_size=32, migrate_budget=1)
+            assert st.migration is not None
+            eng.flush_all()
+            eng.crash()
+            eng.recover()
+            assert st.migration is not None  # resumes where the WAL left it
+        # the recovered lifetime store reinstalled its journaled cutoffs
+        lt_policies = [(s.policy.t_sm, s.policy.t_ml) for s in on.store._all_stores()]
+        assert any(p != (on.config.store.t_sm, on.config.store.t_ml) for p in lt_policies)
+        for eng in (on, off):
+            api.execute(eng, run(74, 60), batch_size=32, migrate_budget=64, gc_every=30)
+            eng.store.drain_migration()
+            assert eng.store.migration is None
+        probe = [make_key(i) for i in range(nk + 20)]
+        assert [on.get(k) for k in probe] == [off.get(k) for k in probe]
+        assert on.scan(b"", 2 * nk) == off.scan(b"", 2 * nk)
+    finally:
+        on.close()
+        off.close()
 
 
 class _CrashNow(Exception):

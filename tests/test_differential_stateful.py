@@ -31,9 +31,12 @@ class DifferentialMachine(RuleBasedStateMachine):
 
     @initialize()
     def setup(self):
-        # small migration batches keep migrations in flight across many steps
+        # small migration batches keep migrations in flight across many steps;
+        # the fourth (lifetime-enabled) range store must stay byte-identical
+        # through adaptive cutoff ticks and class-migrating GC
         self.fleet = make_fleet(90, num_shards=2, rebalance_window=60,
-                                min_split_keys=4, migration_batch_keys=3)
+                                min_split_keys=4, migration_batch_keys=3,
+                                lifetime_range=True)
         self.model: dict[bytes, bytes] = {}
         self.n = 0
 
@@ -88,6 +91,33 @@ class DifferentialMachine(RuleBasedStateMachine):
     @rule()
     def rebalance(self):
         self._rng().rebalance_tick(force=True)
+
+    # ------------------------------------------------- lifetime interleavings
+    @rule()
+    def lifetime_gc_tick(self):
+        """Force GC on the lifetime store: per-class sweeps relocate and
+        class-migrate values, drain parked cutoff proposals through the WAL
+        (record-then-apply) and fence reclaims — all invisible to results."""
+        self.fleet["range_lt"].gc_tick(force=True)
+
+    @rule(offset=st.integers(min_value=0, max_value=3))
+    def lifetime_crash_at_record(self, offset):
+        """Arm an injected crash a few WAL records ahead on the *lifetime*
+        store's metalog and drive GC into it: a crash at a cutoff record
+        drops the cutover (never applied), a crash at a gc_reclaim fence
+        leaves both copies of every relocated value — recovery must keep
+        exactly one winner either way."""
+        lt = self.fleet["range_lt"]
+        lt.flush_all()
+        lt.metalog.crash_after(lt.metalog.total_appended + offset)
+        try:
+            for _ in range(2):
+                lt.gc_tick(force=True)
+        except CrashPoint:
+            lt.crash()
+            lt.recover()
+        finally:
+            lt.metalog.disarm()
 
     # ------------------------------------------------ migration interleavings
     @rule()

@@ -1,0 +1,196 @@
+"""Property battery for the lifetime sketch (optional-deps policy: skips
+without hypothesis; the deterministic smoke checks in ``test_store.py`` /
+``test_differential.py`` always run).
+
+Four families of properties, each the load-bearing guarantee of one design
+decision in :mod:`repro.core.lifetime`:
+
+* **Determinism** — the sketch is crc32-keyed, so identical ``(key, lsn)``
+  streams yield identical estimates/classifications in different processes
+  under different ``PYTHONHASHSEED`` (the no-``hash()`` contract; without it
+  the differential oracle could not replay lifetime-enabled engines).
+* **Monotonicity** — with collisions ruled out by construction, a key updated
+  at smaller inter-update distances never estimates lower than the same key
+  updated at larger distances over the same LSN span.
+* **Window eviction** — once a key's estimate decays to zero after two epoch
+  rotations without an update, no stream of *other* keys' observations can
+  resurrect it: rotation only ever zeroes counters and observations only
+  increment cells the key does not share (collision-free construction).
+* **Oracle twin** — against :class:`~repro.core.lifetime.LifetimeOracle`
+  (exact per-key update lists, brute-force collision mass) the sketch's
+  estimate is an *equality*, not a bound: ``estimate == true_count +
+  min-over-rows collision mass`` — and therefore never underestimates the
+  windowed true count.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.lifetime import (  # noqa: E402
+    CLASS_LONG,
+    CLASS_SHORT,
+    LifetimeConfig,
+    LifetimeOracle,
+    LifetimeSketch,
+)
+
+_SMALL = LifetimeConfig(window=32, rows=3, width=64, ring_size=64)
+
+# streams are (key_index, lsn_gap) pairs; LSNs are cumulative gaps so they
+# are strictly increasing like the store's write LSNs
+_STREAMS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=12),
+              st.integers(min_value=1, max_value=20)),
+    min_size=1, max_size=120,
+)
+
+
+def _feed(sketch, oracle, stream):
+    lsn = 0
+    for ki, gap in stream:
+        lsn += gap
+        key = b"key-%03d" % ki
+        sketch.observe(key, lsn)
+        if oracle is not None:
+            oracle.observe(key, lsn)
+    return lsn
+
+
+# ------------------------------------------------------------- determinism
+_DETERMINISM_SCRIPT = r"""
+import sys
+from repro.core.lifetime import LifetimeConfig, LifetimeSketch
+
+stream = eval(sys.stdin.read())
+sk = LifetimeSketch(LifetimeConfig(window=32, rows=3, width=64, ring_size=64))
+lsn = 0
+for ki, gap in stream:
+    lsn += gap
+    sk.observe(b"key-%03d" % ki, lsn)
+print([(ki, sk.estimate(b"key-%03d" % ki), sk.classify(b"key-%03d" % ki))
+       for ki in range(13)])
+print(sorted(sk.ring), sk.state())
+"""
+
+
+@settings(max_examples=8, deadline=None)
+@given(stream=_STREAMS)
+def test_sketch_deterministic_across_processes(stream):
+    """Same stream, different PYTHONHASHSEED: bit-identical estimates,
+    classifications, ring and state."""
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    outputs = []
+    for seed in ("1", "31337"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _DETERMINISM_SCRIPT],
+            input=repr(stream), capture_output=True, text=True, check=True,
+            env={**os.environ, "PYTHONPATH": src, "PYTHONHASHSEED": seed},
+        )
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1]
+
+
+# ------------------------------------------------------------ monotonicity
+@settings(max_examples=60, deadline=None)
+@given(
+    updates=st.integers(min_value=2, max_value=12),
+    tight=st.integers(min_value=1, max_value=5),
+    slack=st.integers(min_value=1, max_value=8),
+)
+def test_estimate_monotone_in_update_distance(updates, tight, slack):
+    """One key, no collisions possible (single key): shrinking every
+    inter-update gap never lowers the windowed estimate, because fewer
+    updates fall out of the two-epoch window."""
+    loose = tight + slack
+    est = {}
+    for gap in (tight, loose):
+        sk = LifetimeSketch(_SMALL)
+        lsn = 0
+        for _ in range(updates):
+            lsn += gap
+            sk.observe(b"k", lsn)
+        est[gap] = sk.estimate(b"k")
+    assert est[tight] >= est[loose]
+    # and the dense stream's estimate is exact (nothing to collide with)
+    assert est[tight] == min(updates, 2 * _SMALL.window // tight + 1)
+
+
+# --------------------------------------------------------- window eviction
+@settings(max_examples=60, deadline=None)
+@given(stream=_STREAMS, idle_epochs=st.integers(min_value=2, max_value=5))
+def test_window_eviction_never_resurrects(stream, idle_epochs):
+    """After a key decays out of the paired window, feeding arbitrary other
+    keys can only ever keep its estimate at the collision floor — it can
+    never climb back to CLASS_SHORT without the key itself being updated.
+    Uses a dedicated victim key and re-checks against the oracle so collision
+    mass is accounted exactly."""
+    sk = LifetimeSketch(_SMALL)
+    orc = LifetimeOracle(_SMALL)
+    victim = b"victim"
+    sk.observe(victim, 1)
+    sk.observe(victim, 2)
+    orc.observe(victim, 1)
+    orc.observe(victim, 2)
+    assert sk.classify(victim) == CLASS_SHORT
+    # idle the victim past two rotations, then replay the noise stream
+    base = (idle_epochs + 1) * _SMALL.window
+    lsn = base
+    for ki, gap in stream:
+        lsn += gap
+        key = b"noise-%03d" % ki
+        sk.observe(key, lsn)
+        orc.observe(key, lsn)
+    # the victim's true windowed count is zero; whatever the sketch reports
+    # is purely collision mass, exactly as the oracle predicts
+    assert orc.true_count(victim) == 0
+    assert sk.estimate(victim) == orc.expected_estimate(victim)
+
+
+def test_rotation_only_zeroes_counters():
+    """The eviction mechanism itself: a rotation moves cur->prev and an
+    epoch jump zeroes both — no rotation path ever *increases* a counter."""
+    sk = LifetimeSketch(_SMALL)
+    sk.observe(b"a", 1)
+    before = sk.estimate(b"a")
+    sk.observe(b"z", _SMALL.window * 10)  # jump >= 2 epochs
+    assert sk.epoch == 10
+    assert sk.estimate(b"a") <= before
+    assert sk.estimate(b"a") == 0 or sk._cells(b"a") == sk._cells(b"z")
+
+
+# ------------------------------------------------------------- oracle twin
+@settings(max_examples=80, deadline=None)
+@given(stream=_STREAMS)
+def test_sketch_equals_oracle_exactly(stream):
+    """The reference-twin property: for every key the stream touched, the
+    sketch's estimate equals the oracle's collision-aware expectation
+    *exactly*, the estimate never undershoots the windowed true count, and
+    the two sides classify identically."""
+    sk = LifetimeSketch(_SMALL)
+    orc = LifetimeOracle(_SMALL)
+    _feed(sk, orc, stream)
+    assert sk.epoch == orc.epoch
+    for key in orc.updates:
+        assert sk.estimate(key) == orc.expected_estimate(key), key
+        assert sk.estimate(key) >= orc.true_count(key), key
+        assert sk.classify(key) == orc.classify(key), key
+    # a key never observed carries only collision mass and must not be
+    # classified short unless colliders make it so — again oracle-exact
+    ghost = b"never-seen"
+    assert sk.estimate(ghost) == orc.expected_estimate(ghost)
+
+
+@settings(max_examples=40, deadline=None)
+@given(stream=_STREAMS)
+def test_never_seen_key_defaults_long_on_fresh_sketch(stream):
+    """Fresh inserts must prove themselves hot: an untouched sketch maps
+    everything to CLASS_LONG (estimate 0)."""
+    sk = LifetimeSketch(_SMALL)
+    for ki, _ in stream:
+        assert sk.classify(b"key-%03d" % ki) == CLASS_LONG

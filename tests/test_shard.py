@@ -142,6 +142,32 @@ def test_op_stream_and_routing_deterministic_across_processes():
     assert outputs[0] == outputs[1]
 
 
+_HOT_STREAM_SCRIPT = r"""
+from repro.core.ycsb import Workload
+
+ops = list(Workload("run_a", "SD", num_keys=1000, num_ops=400, seed=5,
+                    hot_update_frac=0.6, hot_update_keys=16).run_ops())
+print([(op.kind, op.key.decode(), op.value_size) for op in ops])
+"""
+
+
+def test_hot_update_stream_deterministic_across_processes():
+    """The hot-update-skewed op stream (the lifetime workload knob) must be
+    bit-identical across processes regardless of PYTHONHASHSEED, like the
+    base stream above — bench_lifetime and the lifetime differential tests
+    replay it."""
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    outputs = []
+    for seed in ("1", "31337"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _HOT_STREAM_SCRIPT],
+            capture_output=True, text=True, check=True,
+            env={**os.environ, "PYTHONPATH": src, "PYTHONHASHSEED": seed},
+        )
+        outputs.append(proc.stdout)
+    assert outputs[0] == outputs[1]
+
+
 def test_aggregate_stats_sums_shards():
     st = ShardedStore(4, small_config())
     st.put_many([(make_key(i), b"v" * 60) for i in range(300)])
