@@ -58,12 +58,12 @@ def recovery_bench(emit, smoke: bool = False) -> None:
     st.flush_all()
     t0 = time.time()
     for _ in range(rounds):  # topology churn: every round appends WAL records
-        assert st.split(0)
-        st.merge(0)
+        assert st._split(0)
+        st._merge(0)
     genesis_records = st.metalog.n_records
     genesis_replay = _time_replay(st)
     st.snapshot_metadata(truncate=True)
-    assert st.split(0)  # post-snapshot delta: the only history left to replay
+    assert st._split(0)  # post-snapshot delta: the only history left to replay
     delta_records = st.metalog.n_records
     delta_replay = _time_replay(st)
     wall = time.time() - t0

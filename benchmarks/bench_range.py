@@ -159,7 +159,7 @@ def main(emit, smoke: bool = False) -> None:
         api.execute(eng, load_w.load_ops(), batch_size=BATCH)
         stm = eng.store
         eng.flush_all()
-        stm.split(0, background=True)
+        stm._split(0, background=True)
         tick_bytes = []
         while stm.migration is not None:
             before = stm.device_stats().total

@@ -29,6 +29,7 @@ from . import (
     bench_analysis,
     bench_thresholds,
     bench_checkpoint,
+    bench_elastic,
     bench_fig1,
     bench_kernels,
     bench_lifetime,
@@ -56,6 +57,7 @@ BENCHES = [
     ("roofline", bench_roofline.main),
     ("analysis_overhead", bench_analysis.main),
     ("lifetime_placement", bench_lifetime.main),
+    ("elastic_rescale", bench_elastic.main),
 ]
 
 
@@ -69,6 +71,7 @@ SMOKE_BENCHES = [
     ("analysis_overhead", lambda emit: bench_analysis.main(emit, smoke=True)),
     ("checkpoint_substrate", lambda emit: bench_checkpoint.main(emit, smoke=True)),
     ("lifetime_placement", lambda emit: bench_lifetime.main(emit, smoke=True)),
+    ("elastic_rescale", lambda emit: bench_elastic.main(emit, smoke=True)),
 ]
 
 

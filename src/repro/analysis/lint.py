@@ -55,8 +55,14 @@ FRONTEND_COUNTERS = frozenset([
     "splits", "merges", "migrated_keys", "migration_ticks",
 ])
 
-# range-topology state covered by the record-then-apply discipline
-TOPOLOGY_ATTRS = frozenset(["boundaries", "shards", "_shard_ids", "_migration"])
+# topology state covered by the record-then-apply discipline: the range
+# boundary map and shard registries, plus the elastic-rescale state shared by
+# both partitioning schemes (concurrent migration legs, the rescale
+# coordinator, and a shrinking hash fleet's draining ex-slots)
+TOPOLOGY_ATTRS = frozenset([
+    "boundaries", "shards", "_shard_ids", "_migration",
+    "_migrations", "_rescale", "_draining",
+])
 _MUTATOR_METHODS = frozenset([
     "insert", "append", "pop", "remove", "clear", "extend", "sort", "reverse",
 ])

@@ -110,7 +110,10 @@ class PartitioningConfig:
     The remaining fields mirror :class:`~repro.core.range_shard.RangeShardedStore`'s
     rebalance/migration knobs and are ignored by the other schemes;
     ``migrate_budget`` is the driver-paced migration tick budget per batch
-    (``repro.api.execute``'s default for this engine).
+    (``repro.api.execute``'s default for this engine); ``rescale_budget`` is
+    the default :meth:`Engine.rescale` admission budget — device bytes per
+    migration tick shared across all concurrent rescale legs (0 =
+    unthrottled) — and applies to both sharded schemes.
     """
 
     scheme: str = "none"
@@ -124,6 +127,7 @@ class PartitioningConfig:
     auto_rebalance: bool = True
     migration_batch_keys: int = 128
     migrate_budget: int = 0
+    rescale_budget: int = 0
 
     @classmethod
     def parse(cls, spec: "PartitioningConfig | str", **kw) -> "PartitioningConfig":
@@ -194,7 +198,7 @@ class PartitioningConfig:
                 raise ConfigError("range boundaries must be strictly increasing")
         for field, minimum in (("rebalance_window", 1), ("min_split_keys", 1),
                                ("max_shards", 1), ("migration_batch_keys", 1),
-                               ("migrate_budget", 0)):
+                               ("migrate_budget", 0), ("rescale_budget", 0)):
             if getattr(self, field) < minimum:
                 raise ConfigError(
                     f"partitioning.{field} must be >= {minimum}, got {getattr(self, field)}"
@@ -550,12 +554,15 @@ class Engine:
             # hash store is op-for-op identical to the bare store
             return ShardedStore(1, store_cfg)
         if p.scheme == "hash":
-            return ShardedStore(p.shards, store_cfg)
+            return ShardedStore(p.shards, store_cfg,
+                                migration_batch_keys=p.migration_batch_keys,
+                                rescale_budget=p.rescale_budget)
         kw = dict(
             rebalance_window=p.rebalance_window, split_factor=p.split_factor,
             merge_factor=p.merge_factor, min_split_keys=p.min_split_keys,
             max_shards=p.max_shards, auto_rebalance=p.auto_rebalance,
             migration_batch_keys=p.migration_batch_keys,
+            rescale_budget=p.rescale_budget,
         )
         if p.boundaries is not None:
             return RangeShardedStore(config=store_cfg, boundaries=list(p.boundaries), **kw)
@@ -699,12 +706,63 @@ class Engine:
         return self._executor.gc_tick(force=force)
 
     def migration_tick(self, budget: int | None = None) -> int:
-        """Advance an in-flight range migration (no-op on other schemes)."""
+        """Advance in-flight migrations — a range rebalance leg or any
+        scheme's rescale legs (no-op on a bare store)."""
         self._check_open()
         if self._executor is not None:
             return self._executor.migration_tick(budget)
         tick = getattr(self._store, "migration_tick", None)
         return tick(budget) if tick is not None else 0
+
+    def rescale(self, shards: int, *, budget: int | None = None) -> dict:
+        """Start an online rescale of the fleet to ``shards`` shards.
+
+        Plans a minimal-movement remap (hash: mod-routing compatible sizes
+        only — a multiple or divisor of the current count; range:
+        quantile-driven boundary re-splits), journals it to the shard
+        metadata WAL, and flips routing immediately: reads and writes keep
+        serving while the legs drain in the background via
+        :meth:`migration_tick` (driver-paced; ``repro.api.execute`` paces it
+        for you).  ``budget`` caps device bytes per tick across *all*
+        concurrent legs (default ``partitioning.rescale_budget``; 0 =
+        unthrottled).  Returns :meth:`topology`.  Raises
+        :class:`ConfigError` on a non-sharded engine, a non-positive or
+        unreachable shard count, or a rescale already in flight.
+        """
+        self._check_open()
+        if self.config.partitioning.scheme == "none":
+            raise ConfigError(
+                "rescale() needs a sharded engine; partitioning 'none' is a "
+                "single store — open with 'hash:N' or 'range:N'"
+            )
+        if shards < 1:
+            raise ConfigError(
+                f"rescale() needs a positive shard count, got {shards}"
+            )
+        try:
+            self._sequence(lambda: self._store.rescale(shards, budget=budget))
+        except ValueError as e:
+            raise ConfigError(str(e)) from None
+        return self.topology()
+
+    def topology(self) -> dict:
+        """The fleet shape: ``scheme``, ``shards``, range ``boundaries``
+        (``None`` elsewhere), and ``rescale`` — in-flight rescale progress
+        counters, or ``None`` when the fleet is quiescent.  Usable after
+        :meth:`close` (post-run reporting)."""
+        if not self._closed:
+            self._drain()
+        store = self._store
+        if isinstance(store, ParallaxStore):
+            return {"scheme": "none", "shards": 1, "boundaries": None,
+                    "rescale": None}
+        return {
+            "scheme": self.config.partitioning.scheme,
+            "shards": store.num_shards,
+            "boundaries": (list(store.boundaries)
+                           if isinstance(store, RangeShardedStore) else None),
+            "rescale": store.rescale_progress(),
+        }
 
     def flush_all(self) -> None:
         self._check_open()
@@ -759,7 +817,8 @@ class Engine:
             "gets": store.gets, "get_probes": store.get_probes,
         }
         if isinstance(store, RangeShardedStore):
-            m = store.migration
+            r = store.rescale_progress()
+            m = store.migration if r is None else None
             out["topology"] = {
                 "boundaries": list(store.boundaries),
                 "splits": store.splits, "merges": store.merges,
@@ -767,6 +826,7 @@ class Engine:
                 "migration_ticks": store.migration_ticks,
                 "get_fallbacks": store.get_fallbacks,
                 "migration": None if m is None else dataclasses.asdict(m),
+                "rescale": r,
                 "meta_records": store.metalog.n_records,
                 "meta_bytes": store.metalog.bytes_appended,
             }

@@ -168,24 +168,53 @@ class ShardExecutor:
         if self._errors:
             raise RuntimeError("shard executor task failed") from self._errors[0]
 
+    def _leg_groups(self) -> dict:
+        """Merged queue keys for every shard id touched by an in-flight
+        migration leg: union-find over the legs' src/dst pairs.  Shard ids
+        connected (transitively) by legs share one ``("mig", root)`` key —
+        their queues serialize — while *disjoint* groups keep distinct keys,
+        so a rescale's independent legs drain concurrently.  With a single
+        legacy leg this degenerates to the old ``("mig", min(src, dst))``."""
+        legs = getattr(self.store, "migrations", ())
+        if not legs:
+            return {}
+        parent: dict[int, int] = {}
+
+        def find(x: int) -> int:
+            root = x
+            while parent[root] != root:
+                root = parent[root]
+            while parent[x] != root:
+                parent[x], x = root, parent[x]
+            return root
+
+        for m in legs:
+            parent.setdefault(m.src_id, m.src_id)
+            parent.setdefault(m.dst_id, m.dst_id)
+            a, b = find(m.src_id), find(m.dst_id)
+            if a != b:
+                parent[max(a, b)] = min(a, b)
+        return {sid: ("mig", find(sid)) for sid in parent}
+
     def _queue_key(self, sid: int):
         """Stable queue identity for shard index ``sid``: the shard id where
-        the store has stable ids (range), the index otherwise (hash; its
-        topology never changes).  A migration's src/dst collapse to one key —
-        double-routed reads touch both stores, so the pair must serialize."""
+        the store has stable ids (range), the index otherwise (hash).  Every
+        shard in a migration leg group collapses to the group's merged key —
+        double-routed reads touch both sides of a leg, so each group must
+        serialize (but only within itself; see :meth:`_leg_groups`)."""
         ids = getattr(self.store, "_shard_ids", None)
         key = ids[sid] if ids is not None else sid
-        m = getattr(self.store, "migration", None)
-        if m is not None and key in (m.src_id, m.dst_id):
-            return ("mig", min(m.src_id, m.dst_id))
-        return key
+        return self._leg_groups().get(key, key)
 
-    def _migration_pair(self) -> list[ParallaxStore]:
-        m = getattr(self.store, "migration", None)
-        if m is None:
-            return []
-        by_id = self.store._by_id  # type: ignore[attr-defined]
-        return [by_id[m.src_id], by_id[m.dst_id]]
+    def _group_stores(self, qkey) -> list[ParallaxStore]:
+        """Backing stores of one merged migration group — the set a
+        double-routed read submitted under ``qkey`` may touch.  Only this
+        group's stores are locked by its tasks: locking another group's
+        stores would contend with that group's own (concurrent) tasks and
+        trip the shard-independence assertion spuriously."""
+        groups = self._leg_groups()
+        return [self.store._store_of_id(sid)
+                for sid, key in groups.items() if key == qkey]
 
     # contract: coordinator-only
     def _new_store_lock(self) -> threading.Lock:
@@ -363,17 +392,16 @@ class ShardExecutor:
         with store._stats_lock:
             store.gets += len(keys)
             store.get_probes += len(keys)
-        pair = self._migration_pair()
         for sid, positions in groups.items():
             shard = store.shards[sid]
             qkey = self._queue_key(sid)
-            # only tasks on the merged migration queue can double-route into
-            # the pair (pending-region keys route to the destination, whose
-            # queue key is merged); locking the pair from any other shard's
-            # task would race the pair queue's own tasks and trip the
-            # independence assertion spuriously
+            # only tasks on a merged migration queue can double-route into
+            # that group's stores (pending-region keys route to a leg's
+            # destination, whose queue key is the group's); they lock the
+            # group's stores and nothing else — see _group_stores
             if isinstance(qkey, tuple):
-                stores = [shard] + [s for s in pair if s is not shard]
+                group = self._group_stores(qkey)
+                stores = [shard] + [s for s in group if s is not shard]
             else:
                 stores = [shard]
 
@@ -417,8 +445,11 @@ class ShardExecutor:
         ahead of later work — the same per-shard projection as the serial
         path's stop-the-world ``gc_tick`` — while other shards' foreground
         traffic keeps flowing.  Policy stores run it at a sequence point (its
-        ``_after_batch`` must see the post-GC counters, like serial)."""
-        if self._has_policy:
+        ``_after_batch`` must see the post-GC counters, like serial), and so
+        does a hash store mid-rescale: ``_all_stores()`` then includes
+        draining ex-slots whose list position is not their queue identity,
+        so per-shard enqueueing would mis-key their tasks."""
+        if self._has_policy or getattr(self.store, "migrations", ()):
             self.exclusive(lambda: self.store.gc_tick(force=force))
             return
         handle = BatchHandle(self, len(self.store._all_stores()))

@@ -65,6 +65,7 @@ from .io import Device, DeviceStats
 from .metalog import MetadataLog
 from .shard import BaseShardedStore
 from .store import ParallaxStore, StoreConfig
+from .ycsb import _warn_deprecated
 
 
 def _uniform_boundaries(num_shards: int) -> list[bytes]:
@@ -124,6 +125,7 @@ class RangeShardedStore(BaseShardedStore):
         max_shards: int = 64,
         auto_rebalance: bool = True,
         migration_batch_keys: int = 128,
+        rescale_budget: int = 0,
     ):
         if boundaries is not None:
             if not boundaries or boundaries[0] != b"":
@@ -131,7 +133,9 @@ class RangeShardedStore(BaseShardedStore):
             if any(a >= b for a, b in zip(boundaries, boundaries[1:])):
                 raise ValueError("boundaries must be strictly increasing")
             num_shards = len(boundaries)
-        super().__init__(num_shards, config)
+        super().__init__(num_shards, config,
+                         migration_batch_keys=migration_batch_keys,
+                         rescale_budget=rescale_budget)
         self.boundaries = list(boundaries) if boundaries is not None else _uniform_boundaries(num_shards)
         self.rebalance_window = rebalance_window
         self.split_factor = split_factor
@@ -139,7 +143,6 @@ class RangeShardedStore(BaseShardedStore):
         self.min_split_keys = min_split_keys
         self.max_shards = max_shards
         self.auto_rebalance = auto_rebalance
-        self.migration_batch_keys = migration_batch_keys
         self.splits = 0
         self.merges = 0
         self.migrated_keys = 0
@@ -150,7 +153,6 @@ class RangeShardedStore(BaseShardedStore):
         self._shard_ids = list(range(len(self.shards)))
         self._next_shard_id = len(self.shards)
         self._by_id: dict[int, ParallaxStore] = dict(zip(self._shard_ids, self.shards))
-        self._migration: MigrationState | None = None
         # the shard-metadata WAL lives on its own (cache-less) device so its
         # bytes are attributable; device_stats() folds it into the aggregate
         self.meta_device = Device(
@@ -191,7 +193,29 @@ class RangeShardedStore(BaseShardedStore):
 
     @property
     def migration(self) -> MigrationState | None:
-        return self._migration
+        """The single in-flight migration leg, or the first of a rescale's
+        concurrent legs (compat view over ``self.migrations``)."""
+        return self._migrations[0] if self._migrations else None
+
+    def _leg_for_key(self, key: bytes) -> MigrationState | None:
+        """The leg whose pending window holds ``key`` (legs' moved spans are
+        disjoint, so at most one matches)."""
+        for m in self._migrations:
+            if m.pending(key):
+                return m
+        return None
+
+    def _leg_for_dst(self, sid: int) -> MigrationState | None:
+        """The leg migrating *into* shard id ``sid`` (range plans never give
+        one destination two legs: split destinations are fresh shards, merge
+        destinations are pairwise non-adjacent)."""
+        for m in self._migrations:
+            if m.dst_id == sid:
+                return m
+        return None
+
+    def _store_of_id(self, sid: int) -> ParallaxStore:
+        return self._by_id[sid]
 
     def _all_stores(self) -> list[ParallaxStore]:
         return list(self._by_id.values())
@@ -228,8 +252,8 @@ class RangeShardedStore(BaseShardedStore):
         range, and possibly stale live copies from a crashed one) and must
         defer to the draining old shard, costing one extra front-end probe.
         """
-        m = self._migration
-        if m is not None and m.pending(key):
+        m = self._leg_for_key(key)
+        if m is not None:
             dst = self._by_id[m.dst_id]
             entry = dst.index_entry(key)  # pure index walk, free
             if entry is not None and entry.lsn > m.epoch_lsn:
@@ -295,8 +319,7 @@ class RangeShardedStore(BaseShardedStore):
             self.scan_probes += 1
             lo, hi = self.bounds(i)
             first = max(start, lo)
-            m = self._migration
-            if m is not None and self._shard_ids[i] == m.dst_id:
+            if self._leg_for_dst(self._shard_ids[i]) is not None:
                 for key, value in self._shard_rows(i, first, 1 << 62):
                     if hi is not None and key >= hi:
                         break
@@ -325,8 +348,8 @@ class RangeShardedStore(BaseShardedStore):
         the first ``need`` resolved keys are the true merged prefix.
         """
         shard = self.shards[i]
-        m = self._migration
-        if m is None or self._shard_ids[i] != m.dst_id:
+        m = self._leg_for_dst(self._shard_ids[i])
+        if m is None:
             return shard.scan(start, need)
         pend_lo = max(start, m.cursor)
         if m.hi is not None and pend_lo >= m.hi:
@@ -367,7 +390,7 @@ class RangeShardedStore(BaseShardedStore):
     # migration is in flight, where the skew policy runs
     def _after_batch(self) -> None:
         self._drain_cutoff_proposals()
-        if self._migration is not None:
+        if self._migrations or self._rescale is not None:
             self.migration_tick()
         elif self.auto_rebalance:
             self.rebalance_tick()
@@ -432,7 +455,7 @@ class RangeShardedStore(BaseShardedStore):
         A split of the hottest qualifying shard is preferred over a merge of
         the coldest qualifying adjacent pair.
         """
-        if self._migration is not None:
+        if self._migrations or self._rescale is not None:
             self.migration_tick()
             return 0
         counts = self._op_counts()
@@ -461,17 +484,31 @@ class RangeShardedStore(BaseShardedStore):
                 merge_idx = cold
 
         changed = 0
-        if split_idx is not None and self.split(split_idx, background=True):
+        if split_idx is not None and self._split(split_idx, background=True):
             changed = 1
         elif merge_idx is not None:
-            self.merge(merge_idx, background=True)
+            self._merge(merge_idx, background=True)
             changed = 1
         self._window_base = self._op_counts()
         return changed
 
     # -------------------------------------------------------------- migration
-    # contract: coordinator-only, record-then-apply
     def split(self, i: int, at: bytes | None = None, *, background: bool = False) -> bool:
+        """Deprecated public surface (warns once): ad-hoc topology mutation is
+        engine-owned now — use ``repro.api`` ``Engine.rescale()`` for explicit
+        shape changes (the auto-rebalance policy keeps handling skew).
+        Delegates to the internal :meth:`_split` unchanged."""
+        _warn_deprecated("RangeShardedStore.split", "repro.api Engine.rescale")
+        return self._split(i, at, background=background)
+
+    def merge(self, i: int, *, background: bool = False) -> None:
+        """Deprecated public surface (warns once): see :meth:`split`.
+        Delegates to the internal :meth:`_merge` unchanged."""
+        _warn_deprecated("RangeShardedStore.merge", "repro.api Engine.rescale")
+        self._merge(i, background=background)
+
+    # contract: coordinator-only, record-then-apply
+    def _split(self, i: int, at: bytes | None = None, *, background: bool = False) -> bool:
         """Split shard ``i`` at ``at`` (default: its median live key).
 
         Creates the new shard, durably records ``split_start`` and flips the
@@ -504,8 +541,8 @@ class RangeShardedStore(BaseShardedStore):
         self.shards.insert(i + 1, dst)
         self._shard_ids.insert(i + 1, dst_id)
         self.boundaries.insert(i + 1, at)
-        dst.pin_tombstones = True  # fence: see _finish_migration
-        self._migration = MigrationState("split", src_id, dst_id, at, hi, at, dst.lsn)
+        dst.pin_tombstones = True  # fence: see _finish_leg
+        self._migrations.append(MigrationState("split", src_id, dst_id, at, hi, at, dst.lsn))
         self.splits += 1
         self._window_base = self._op_counts()
         if not background:
@@ -513,7 +550,7 @@ class RangeShardedStore(BaseShardedStore):
         return True
 
     # contract: coordinator-only, record-then-apply
-    def merge(self, i: int, *, background: bool = False) -> None:
+    def _merge(self, i: int, *, background: bool = False) -> None:
         """Merge shard ``i+1`` into shard ``i`` (cold-neighbor compaction).
 
         Durably records ``merge_start`` and drops the boundary — the
@@ -538,16 +575,103 @@ class RangeShardedStore(BaseShardedStore):
         del self.shards[i + 1]
         del self._shard_ids[i + 1]
         del self.boundaries[i + 1]
-        left.pin_tombstones = True  # fence: see _finish_migration
-        self._migration = MigrationState("merge", right_id, left_id, lo, hi, lo, left.lsn)
+        left.pin_tombstones = True  # fence: see _finish_leg
+        self._migrations.append(MigrationState("merge", right_id, left_id, lo, hi, lo, left.lsn))
         self.merges += 1
         self._window_base = self._op_counts()
         if not background:
             self.drain_migration()
 
+    # contract: coordinator-only
+    def rescale(self, new_shards: int, *, budget: int | None = None,
+                key_sample=None) -> int:
+        """Start an online rescale of the boundary map to ``new_shards``
+        ranges; returns the number of migration legs started (0 when nothing
+        changes).
+
+        The plan comes from :func:`repro.elastic.remap.plan_rescale`:
+        growing adds quantile cuts inside the most populous ranges (keys
+        outside the cut spans never move), shrinking merges the lightest
+        non-adjacent pairs; ``key_sample`` defaults to the fleet's live keys
+        (an index walk — no device traffic).  Every leg is an ordinary
+        journaled migration; all legs drain concurrently through
+        :meth:`migration_tick` under a shared device-byte budget per tick
+        (``budget``, default the store's ``rescale_budget``; 0 =
+        unthrottled).  A rescale already in flight raises ``ValueError``; a
+        legacy single split/merge leg is drained first, like ``_split`` does.
+        """
+        from ..elastic.remap import Topology, plan_rescale
+
+        if self._rescale is not None:
+            raise ValueError(
+                "a rescale is already in flight; drain it first (drain_migration)")
+        self.drain_migration()
+        n = len(self.shards)
+        if key_sample is None:
+            key_sample = []
+            for i, s in enumerate(self.shards):
+                lo, hi = self.bounds(i)
+                key_sample.extend(s.live_keys_in(lo, hi))
+        plan = plan_rescale(Topology("range", n, tuple(self.boundaries)),
+                            new_shards, key_sample=key_sample)
+        if not plan.legs:
+            return 0
+        use_budget = self.rescale_budget if budget is None else budget
+        if plan.new_shards > n:
+            # split legs: fresh destination shards, one per boundary cut.
+            # plan positions are post-rescale; old ids keep the positions of
+            # their (surviving) boundaries, cut positions get the new ids
+            dsts = [self._new_shard() for _ in plan.legs]
+            dst_ids = [self._register(d) for d in dsts]
+            ids_by_pos = {plan.boundaries.index(b): sid
+                          for b, sid in zip(self.boundaries, self._shard_ids)}
+            for leg, sid in zip(plan.legs, dst_ids):
+                ids_by_pos[leg.dst] = sid
+            new_ids = [ids_by_pos[p] for p in range(plan.new_shards)]
+            legs_rec = [["split", ids_by_pos[leg.src], dst_ids[i],
+                         leg.lo, leg.hi, dsts[i].lsn]
+                        for i, leg in enumerate(plan.legs)]
+        else:
+            # merge legs: dropped position t drains into the surviving left
+            # neighbor (non-adjacent drops guarantee t-1 survives)
+            dropped = {leg.src for leg in plan.legs}
+            new_ids = [sid for p, sid in enumerate(self._shard_ids)
+                       if p not in dropped]
+            legs_rec = [["merge", self._shard_ids[leg.src],
+                         self._shard_ids[leg.src - 1], leg.lo, leg.hi,
+                         self._by_id[self._shard_ids[leg.src - 1]].lsn]
+                        for leg in plan.legs]
+        return self._start_rescale(plan, legs_rec, new_ids, use_budget)
+
+    # contract: coordinator-only, record-then-apply
+    def _start_rescale(self, plan, legs_rec, new_ids, budget: int) -> int:
+        """Commit the ``rescale_start`` record — the full post-rescale
+        topology plus every leg — then flip the boundary map and install the
+        legs.  Record-then-apply: a crash at the record site leaves the old
+        topology; replay drops the orphan split destinations and the rescale
+        never was."""
+        from ..elastic.remap import RescaleState
+
+        self.metalog.append(
+            {"kind": "rescale_start", "scheme": "range",
+             "boundaries": list(plan.boundaries), "shards": list(new_ids),
+             "legs": [list(r) for r in legs_rec],
+             "from": plan.old_shards, "to": plan.new_shards, "budget": budget})
+        self.boundaries = list(plan.boundaries)
+        self._shard_ids = list(new_ids)
+        self.shards = [self._by_id[sid] for sid in new_ids]
+        for kind, src_id, dst_id, lo, hi, epoch in legs_rec:
+            self._by_id[dst_id].pin_tombstones = True  # fence: see _finish_leg
+            self._migrations.append(
+                MigrationState(kind, src_id, dst_id, lo, hi, lo, epoch))
+        self._rescale = RescaleState(plan, budget=budget,
+                                     dst_ids=tuple(r[2] for r in legs_rec))
+        self._window_base = self._op_counts()
+        return len(legs_rec)
+
     # contract: coordinator-only, record-then-apply, flush-before-record
-    def migration_tick(self, max_keys: int | None = None) -> int:
-        """Advance the in-flight migration by one batch; returns keys copied.
+    def _advance_leg(self, m: MigrationState, max_keys: int | None = None) -> int:
+        """Advance one migration leg by one batch; returns keys copied.
 
         Per-batch ordering (the PR 1/PR 2 discipline at batch granularity):
         copy the batch into the destination → **flush the destination** →
@@ -556,12 +680,11 @@ class RangeShardedStore(BaseShardedStore):
         re-runs the batch from the last durable cursor; re-copies are
         idempotent because any destination entry newer than the migration
         epoch (an application write since the flip, or the earlier copy
-        itself) is left untouched.
+        itself) is left untouched.  Under a rescale the checkpoint/finish
+        records carry a ``leg`` key (the destination shard id) so replay can
+        advance the right one of several concurrent legs; legacy single-leg
+        records are byte-identical to the pre-elastic stream.
         """
-        m = self._migration
-        if m is None:
-            return 0
-        self.migration_ticks += 1
         budget = max(1, self.migration_batch_keys if max_keys is None else max_keys)
         src, dst = self._by_id[m.src_id], self._by_id[m.dst_id]
         keys = src.live_keys_in(m.cursor, m.hi)
@@ -590,7 +713,10 @@ class RangeShardedStore(BaseShardedStore):
         dst.flush_all()
         if batch:
             new_cursor = batch_hi if batch_hi is not None else _next_key(batch[-1])
-            self.metalog.append({"kind": "checkpoint", "cursor": new_cursor})
+            rec = {"kind": "checkpoint", "cursor": new_cursor}
+            if self._rescale is not None:
+                rec["leg"] = m.dst_id  # names one of the concurrent legs
+            self.metalog.append(rec)
             m.cursor = new_cursor
             # only now does the source drop the batch (tombstones through the
             # normal write path); losing them in a crash leaves stale copies
@@ -599,31 +725,27 @@ class RangeShardedStore(BaseShardedStore):
             src.delete_range(batch[0], batch_hi, internal=True, keys=batch)
             self.migrated_keys += len(batch)
         if last_batch:
-            self.metalog.append({"kind": "finish"})
-            self._finish_migration()
+            rec = {"kind": "finish"}
+            if self._rescale is not None:
+                rec["leg"] = m.dst_id
+            self.metalog.append(rec)
+            self._finish_leg(m)
         return moved
 
-    def drain_migration(self, max_ticks: int = 1_000_000) -> int:
-        """Run migration ticks until none is in flight; returns ticks used."""
-        n = 0
-        while self._migration is not None and n < max_ticks:
-            self.migration_tick()
-            n += 1
-        return n
-
-    def _finish_migration(self) -> None:
-        m = self._migration
-        if m is not None:
-            # lift the tombstone fence: while the migration was in flight,
-            # the destination's tombstones were the only evidence that a key
-            # was deleted after the flip — compaction must not drop them at
-            # the last level or the copy-skip rule / read fallback would
-            # resurrect the source's stale copy.  With the source drained
-            # (and, for merges, retired) they may be collected again.
+    def _finish_leg(self, m: MigrationState) -> None:
+        # lift the tombstone fence: while the migration was in flight, the
+        # destination's tombstones were the only evidence that a key was
+        # deleted after the flip — compaction must not drop them at the last
+        # level or the copy-skip rule / read fallback would resurrect the
+        # source's stale copy.  With the source drained (and, for merges,
+        # retired) they may be collected again.
+        self._migrations.remove(m)
+        if self._leg_for_dst(m.dst_id) is None:
             self._by_id[m.dst_id].pin_tombstones = False
-            if m.kind == "merge":
-                self._retire_by_id(m.src_id)
-        self._migration = None
+        if m.kind == "merge":
+            self._retire_by_id(m.src_id)
+        if self._rescale is not None:
+            self._rescale.legs_done += 1
         self._window_base = self._op_counts()
 
     def _retire_by_id(self, sid: int) -> None:
@@ -653,23 +775,27 @@ class RangeShardedStore(BaseShardedStore):
         """
         for store in self._all_stores():
             store.flush_all()
-        m = self._migration
-        idx = self.metalog.append(
-            {
-                "kind": "snapshot",
-                "boundaries": list(self.boundaries),
-                "shards": list(self._shard_ids),
-                "next_shard_id": self._next_shard_id,
-                "migration": None if m is None else dataclasses.asdict(m),
-                # adapted per-shard cutoffs ride the snapshot so truncating
-                # the WAL prefix doesn't forget journaled cutoff cutovers
-                "cutoffs": [
-                    [sid, store.policy.t_sm, store.policy.t_ml]
-                    for sid, store in sorted(self._by_id.items())
-                    if store.lifetime is not None
-                ],
-            }
-        )
+        m = self.migration if self._rescale is None else None
+        rec = {
+            "kind": "snapshot",
+            "boundaries": list(self.boundaries),
+            "shards": list(self._shard_ids),
+            "next_shard_id": self._next_shard_id,
+            "migration": None if m is None else dataclasses.asdict(m),
+            # adapted per-shard cutoffs ride the snapshot so truncating
+            # the WAL prefix doesn't forget journaled cutoff cutovers
+            "cutoffs": [
+                [sid, store.policy.t_sm, store.policy.t_ml]
+                for sid, store in sorted(self._by_id.items())
+                if store.lifetime is not None
+            ],
+        }
+        if self._rescale is not None:
+            # an in-flight rescale rides the snapshot (key absent otherwise,
+            # so legacy snapshot records stay byte-identical): the active
+            # legs at their cursors plus the coordinator bookkeeping
+            rec["rescale"] = self._rescale_record()
+        idx = self.metalog.append(rec)
         if truncate:
             self.metalog.truncate(idx)
             idx = 0
@@ -680,11 +806,13 @@ class RangeShardedStore(BaseShardedStore):
 
         Includes the draining source of an in-flight migration and the full
         :class:`MigrationState`, so a restore resumes the migration exactly
-        where the snapshot caught it.  Used by ``repro.api.Engine.snapshot``
-        / ``clone``; the inverse is :meth:`load_state`.
+        where the snapshot caught it — likewise a whole in-flight rescale
+        (every concurrent leg plus the coordinator bookkeeping, under the
+        ``"rescale"`` key).  Used by ``repro.api.Engine.snapshot`` /
+        ``clone``; the inverse is :meth:`load_state`.
         """
-        m = self._migration
-        return {
+        m = self.migration if self._rescale is None else None
+        state = {
             "kind": "range",
             "boundaries": list(self.boundaries),
             "shard_ids": list(self._shard_ids),
@@ -695,6 +823,44 @@ class RangeShardedStore(BaseShardedStore):
                 for sid, store in sorted(self._by_id.items())
             ],
         }
+        if self._rescale is not None:
+            state["rescale"] = self._rescale_record()
+        return state
+
+    def _rescale_record(self) -> dict:
+        """Portable form of the in-flight rescale: the active legs at their
+        cursors plus everything needed to rebuild the plan and coordinator
+        (``RescalePlan``/``RescaleState``) on replay or restore."""
+        r = self._rescale
+        return {
+            "legs": [dataclasses.asdict(m) for m in self._migrations],
+            "plan_legs": [[l.kind, l.src, l.dst] for l in r.plan.legs],
+            "from": r.plan.old_shards,
+            "to": r.plan.new_shards,
+            "moved_fraction": r.plan.moved_fraction,
+            "budget": r.budget,
+            "dst_ids": list(r.dst_ids),
+            "keys_moved": r.keys_moved,
+            "ticks": r.ticks,
+            "next_leg": r.next_leg,
+        }
+
+    def _load_rescale(self, rec: dict, boundaries) -> None:
+        """Inverse of :meth:`_rescale_record`: install legs + coordinator."""
+        from ..elastic.remap import RescaleLeg, RescalePlan, RescaleState
+
+        self._migrations = [MigrationState(**d) for d in rec["legs"]]
+        plan = RescalePlan(
+            "range", rec["from"], rec["to"],
+            tuple(RescaleLeg(k, s, d) for k, s, d in rec["plan_legs"]),
+            tuple(boundaries), rec["moved_fraction"])
+        state = RescaleState(plan, budget=rec["budget"],
+                             dst_ids=tuple(rec["dst_ids"]))
+        state.legs_done = len(plan.legs) - len(self._migrations)
+        state.keys_moved = rec["keys_moved"]
+        state.ticks = rec["ticks"]
+        state.next_leg = rec["next_leg"]
+        self._rescale = state
 
     def load_state(self, state: dict) -> None:
         """Replace this store's contents with a :meth:`state_snapshot`.
@@ -707,19 +873,28 @@ class RangeShardedStore(BaseShardedStore):
         """
         if state.get("kind") != "range":
             raise ValueError(f"expected a range-store state, got {state.get('kind')!r}")
-        m = state["migration"]
-        migration = None if m is None else MigrationState(**m)
+        rescale = state.get("rescale")
+        if rescale is not None:
+            migrations = [MigrationState(**d) for d in rescale["legs"]]
+        else:
+            m = state["migration"]
+            migrations = [] if m is None else [MigrationState(**m)]
+        pinned = {m.dst_id for m in migrations}
         by_id: dict[int, ParallaxStore] = {}
         for sid, snap in state["stores"]:
             store = self._new_shard()
-            store.pin_tombstones = migration is not None and sid == migration.dst_id
+            store.pin_tombstones = sid in pinned
             store.load_rows(snap["rows"], snap["lsn"])
             by_id[sid] = store
         self.boundaries = list(state["boundaries"])
         self._shard_ids = list(state["shard_ids"])
         self._by_id = by_id
         self.shards = [by_id[sid] for sid in self._shard_ids]
-        self._migration = migration
+        if rescale is not None:
+            self._load_rescale(rescale, state["boundaries"])
+        else:
+            self._migrations = migrations
+            self._rescale = None
         self._next_shard_id = max(state["next_shard_id"], max(by_id, default=-1) + 1)
         self.snapshot_metadata(truncate=True)
         self._window_base = self._op_counts()
@@ -743,9 +918,12 @@ class RangeShardedStore(BaseShardedStore):
             s.recover()
 
     def _replay_metalog(self) -> None:
+        from ..elastic.remap import RescaleLeg, RescalePlan, RescaleState
+
         boundaries: list[bytes] = []
         ids: list[int] = []
-        migration: MigrationState | None = None
+        migrations: list[MigrationState] = []
+        rescale_state: RescaleState | None = None
         snap_next = 0
         cutoffs: dict[int, tuple[float, float]] = {}
         for rec in self.metalog.replay():
@@ -759,7 +937,22 @@ class RangeShardedStore(BaseShardedStore):
                 boundaries = list(rec["boundaries"])
                 ids = list(rec["shards"])
                 m = rec["migration"]
-                migration = None if m is None else MigrationState(**m)
+                migrations = [] if m is None else [MigrationState(**m)]
+                r = rec.get("rescale")
+                if r is not None:
+                    migrations = [MigrationState(**d) for d in r["legs"]]
+                    plan = RescalePlan(
+                        "range", r["from"], r["to"],
+                        tuple(RescaleLeg(k, s, d) for k, s, d in r["plan_legs"]),
+                        tuple(boundaries), r["moved_fraction"])
+                    rescale_state = RescaleState(
+                        plan, budget=r["budget"], dst_ids=tuple(r["dst_ids"]))
+                    rescale_state.legs_done = len(plan.legs) - len(migrations)
+                    rescale_state.keys_moved = r["keys_moved"]
+                    rescale_state.ticks = r["ticks"]
+                    rescale_state.next_leg = r["next_leg"]
+                else:
+                    rescale_state = None
                 snap_next = max(snap_next, rec["next_shard_id"])
                 for sid, t_sm, t_ml in rec.get("cutoffs", ()):
                     cutoffs[sid] = (t_sm, t_ml)
@@ -774,25 +967,50 @@ class RangeShardedStore(BaseShardedStore):
                 pos = ids.index(rec["src"])
                 boundaries.insert(pos + 1, rec["at"])
                 ids.insert(pos + 1, rec["dst"])
-                migration = MigrationState(
+                migrations = [MigrationState(
                     "split", rec["src"], rec["dst"], rec["at"], rec["hi"], rec["at"], rec["epoch"]
-                )
+                )]
             elif kind == "merge_start":
                 pos = ids.index(rec["src"])
                 del boundaries[pos]
                 del ids[pos]
-                migration = MigrationState(
+                migrations = [MigrationState(
                     "merge", rec["src"], rec["dst"], rec["lo"], rec["hi"], rec["lo"], rec["epoch"]
-                )
+                )]
+            elif kind == "rescale_start":
+                # the whole flip in one record: topology after, one leg per
+                # moving pair (all start at their span's lo)
+                boundaries = list(rec["boundaries"])
+                ids = list(rec["shards"])
+                migrations = [
+                    MigrationState(k, src, dst, lo, hi, lo, epoch)
+                    for k, src, dst, lo, hi, epoch in rec["legs"]]
+                plan = RescalePlan(
+                    "range", rec["from"], rec["to"],
+                    tuple(RescaleLeg(k, s, d)
+                          for k, s, d, _lo, _hi, _e in rec["legs"]),
+                    tuple(boundaries), 0.0)
+                rescale_state = RescaleState(
+                    plan, budget=rec["budget"],
+                    dst_ids=tuple(r[2] for r in rec["legs"]))
             elif kind == "checkpoint":
-                migration.cursor = rec["cursor"]
+                m = (migrations[0] if "leg" not in rec else
+                     next(x for x in migrations if x.dst_id == rec["leg"]))
+                m.cursor = rec["cursor"]
             elif kind == "finish":
-                if migration is not None and migration.kind == "merge":
-                    self._retire_by_id(migration.src_id)
-                migration = None
+                m = (migrations[0] if "leg" not in rec else
+                     next(x for x in migrations if x.dst_id == rec["leg"]))
+                if m.kind == "merge":
+                    self._retire_by_id(m.src_id)
+                migrations.remove(m)
+                if rescale_state is not None:
+                    rescale_state.legs_done += 1
+            elif kind == "rescale_finish":
+                migrations = []
+                rescale_state = None
         live = set(ids)
-        if migration is not None:
-            live.update((migration.src_id, migration.dst_id))
+        for m in migrations:
+            live.update((m.src_id, m.dst_id))
         for sid in [s for s in self._by_id if s not in live]:
             # a destination created just before its start record was lost:
             # empty by construction (data only moves after the record), drop
@@ -800,11 +1018,13 @@ class RangeShardedStore(BaseShardedStore):
         self.boundaries = boundaries
         self._shard_ids = ids
         self.shards = [self._by_id[sid] for sid in ids]
-        self._migration = migration
+        self._migrations = migrations
+        self._rescale = rescale_state
         # rebuild the tombstone fence from the WAL (it is derived state): only
-        # the destination of the in-flight migration, if any, is pinned
+        # the destinations of in-flight migration legs, if any, are pinned
+        pinned = {m.dst_id for m in migrations}
         for sid, store in self._by_id.items():
-            store.pin_tombstones = migration is not None and sid == migration.dst_id
+            store.pin_tombstones = sid in pinned
             applied = cutoffs.get(sid)
             if applied is not None and store.lifetime is not None:
                 store.apply_cutoffs(*applied)
@@ -830,7 +1050,7 @@ class RangeShardedStore(BaseShardedStore):
 
     def checkpoint_stats(self) -> dict:
         out = super().checkpoint_stats()
-        m = self._migration
+        m = self.migration if self._rescale is None else None
         out.update(
             boundaries=list(self.boundaries),
             splits=self.splits,
@@ -842,6 +1062,8 @@ class RangeShardedStore(BaseShardedStore):
             meta_records=self.metalog.n_records,
             meta_bytes=self.metalog.bytes_appended,
         )
+        if self._rescale is not None:
+            out["rescale"] = self._rescale.progress()
         return out
 
 

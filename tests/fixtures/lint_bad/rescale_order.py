@@ -1,0 +1,27 @@
+"""Planted violations: the rescale coordinator breaking the WAL discipline.
+
+A rescale flips the routing topology (``shards``/``_draining``) and arms the
+per-leg migration registry (``_migrations``/``_rescale``); all of that must
+happen *after* the ``rescale_start`` record, or a crash leaves live traffic
+routed through topology no recovery can rebuild.  Likewise the per-leg
+``finish`` record drops the leg from recovery's view, so the source shard's
+deletes must be flushed durable *before* the record is appended.
+"""
+# lint-expect: record-then-apply
+# lint-expect: flush-before-record
+
+
+class Coordinator:
+    # contract: record-then-apply
+    def rescale(self, plan):
+        self._rescale = plan  # armed before the rescale_start record: wrong
+        self._draining[plan.src] = self.shards[plan.src]  # routing flip, unrecorded
+        self._migrations[plan.dst] = plan.leg  # leg visible with no durable evidence
+        self.metalog.append({"kind": "rescale_start", "legs": plan.legs})
+
+    # contract: flush-before-record
+    def finish_leg(self, src, leg):
+        # the record drops the leg from recovery's view while src deletes
+        # it covers may still be volatile: wrong order
+        self.metalog.append({"kind": "finish", "leg": leg.index})
+        src.flush_all()

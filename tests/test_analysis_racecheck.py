@@ -222,6 +222,38 @@ def test_async_range_workload_with_migration_is_race_free():
         assert checker.reports == []
 
 
+@pytest.mark.parametrize("partitioning,to_shards",
+                         [("hash:2", 4), ("range:2", 4)])
+def test_async_rescale_concurrent_legs_race_free(partitioning, to_shards):
+    """The elastic-rescale path under the detector: an online rescale on a
+    serving async engine — multiple legs advanced through the executor's
+    disjoint-pair scheduling, double-routed point reads, the owner-resolved
+    merged scan, and (grow) shards created mid-session — must close
+    report-free with the machinery engaged."""
+    keys = [b"k%05d" % i for i in range(300)]
+    with open_engine(partitioning=partitioning, execution="async",
+                     debug_checks=True) as eng:
+        for k in keys:
+            eng.put(k, b"v" + k)
+        eng.rescale(to_shards)
+        for _ in range(200):
+            if eng.topology()["rescale"] is None:
+                break
+            eng.migration_tick()
+            for k in keys[::61]:          # reads overlap the draining legs
+                assert eng.get(k) == b"v" + k
+            assert len(eng.scan(b"k00100", 20)) == 20
+        t = eng.topology()
+        assert t["rescale"] is None and t["shards"] == to_shards
+        for k in keys[::7]:
+            assert eng.get(k) == b"v" + k
+        assert len(eng.scan(b"k00000", 50)) == 50
+        checker = eng.race_checker
+        assert checker.events > 0, "instrumentation never fired"
+        assert checker.barriers > 0, "drain barrier never fired"
+        assert checker.reports == []
+
+
 def test_lifetime_gc_and_cutover_race_free():
     """PR 8 paths under the detector: sketch observation on the write path,
     short-log placement and per-class GC (with the coordinator's gc_reclaim

@@ -247,7 +247,7 @@ def test_iterator_across_shard_boundary_mid_migration():
         store.flush_all()
         hot = max(range(store.num_shards),
                   key=lambda i: len(store.shards[i].live_keys_in(*store.bounds(i))))
-        assert store.split(hot, background=True)
+        assert store._split(hot, background=True)
         db.migration_tick()  # move a few keys; leave the migration pending
         assert store.migration is not None
         full = db.scan(b"", nk + 50)

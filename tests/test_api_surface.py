@@ -56,12 +56,14 @@ API_METHODS = {
         "migration_tick": "(self, budget: 'int | None' = None) -> 'int'",
         "put": "(self, key: 'bytes', value: 'bytes') -> 'None'",
         "recover": "(self) -> 'None'",
+        "rescale": "(self, shards: 'int', *, budget: 'int | None' = None) -> 'dict'",
         "restore": "(self, path: 'str') -> 'None'",
         "scan": "(self, start: 'bytes', count: 'int') -> 'list[tuple[bytes, bytes]]'",
         "snapshot": "(self, path: 'str | None' = None) -> 'str'",
         "space_bytes": "(self) -> 'int'",
         "stats": "(self) -> 'dict'",
         "store": "<property>",
+        "topology": "(self) -> 'dict'",
         "update": "(self, key: 'bytes', value: 'bytes') -> 'None'",
         "write": "(self, batch: 'WriteBatch') -> 'None'",
         "write_batch": "(self) -> 'WriteBatch'",
@@ -90,7 +92,7 @@ CONFIG_FIELDS = {
     "PartitioningConfig": [
         "scheme", "shards", "boundaries", "rebalance_window", "split_factor",
         "merge_factor", "min_split_keys", "max_shards", "auto_rebalance",
-        "migration_batch_keys", "migrate_budget",
+        "migration_batch_keys", "migrate_budget", "rescale_budget",
     ],
     "ExecutionConfig": ["mode", "workers", "pipeline", "pace", "max_pending", "overlap"],
 }
@@ -122,6 +124,7 @@ CONFIG_DEFAULTS = {
     ("PartitioningConfig", "shards"): 1,
     ("PartitioningConfig", "migration_batch_keys"): 128,
     ("PartitioningConfig", "migrate_budget"): 0,
+    ("PartitioningConfig", "rescale_budget"): 0,
     ("ExecutionConfig", "mode"): "serial",
     ("ExecutionConfig", "workers"): 4,
     ("ExecutionConfig", "pipeline"): True,

@@ -28,7 +28,7 @@ import dataclasses
 
 import pytest
 
-from repro.core import LifetimeConfig, RangeShardedStore, StoreConfig
+from repro.core import LifetimeConfig, RangeShardedStore, ShardedStore, StoreConfig
 from repro.core.metalog import CrashPoint
 from repro.core.ycsb import make_key, payload
 
@@ -82,15 +82,15 @@ def _prelude_none(st, model) -> None:
 
 
 def _prelude_split(st, model) -> None:
-    assert st.split(0)  # synchronous: completes before the scenario starts
+    assert st._split(0)  # synchronous: completes before the scenario starts
 
 
 def scenario_split(st, model) -> None:
-    assert st.split(0)
+    assert st._split(0)
 
 
 def scenario_merge(st, model) -> None:
-    st.merge(0)
+    st._merge(0)
 
 
 def _traffic_round(st, model, round_: int) -> None:
@@ -115,7 +115,7 @@ def _traffic_round(st, model, round_: int) -> None:
 def scenario_mid_migration(st, model) -> None:
     """Background split with application traffic between every tick: writes
     double-route to the new owner, reads must keep agreeing at each site."""
-    assert st.split(0, background=True)
+    assert st._split(0, background=True)
     for round_ in range(50):
         if st.migration is None:
             break
@@ -130,7 +130,7 @@ def scenario_snapshot_mid_migration(st, model) -> None:
     the snapshot append itself (crash there: the full history survives, the
     truncation never was) and every record appended after the WAL was cut
     down to the snapshot (crash there: recovery replays the O(delta) tail)."""
-    assert st.split(0, background=True)
+    assert st._split(0, background=True)
     for round_ in range(50):
         if st.migration is None:
             break
@@ -170,7 +170,7 @@ def scenario_lifetime_mid_migration(st, model) -> None:
     gc_reclaim sites land between migration checkpoints (the tick rides the
     GC batch boundary), so crashes cover every interleaving of the two
     protocols' records."""
-    assert st.split(0, background=True)
+    assert st._split(0, background=True)
     for round_ in range(50):
         if st.migration is None:
             break
@@ -180,11 +180,53 @@ def scenario_lifetime_mid_migration(st, model) -> None:
         st.gc_tick(force=True)  # _after_batch also advances the migration
 
 
+def _rescale_rounds(st, model, snapshot_at: int | None = None) -> None:
+    for round_ in range(50):
+        if st._rescale is None:
+            break
+        _traffic_round(st, model, round_)
+        st.flush_all()       # durable base before the next crash site
+        if round_ == snapshot_at:
+            st.snapshot_metadata(truncate=True)  # carries the in-flight rescale
+        st.migration_tick()  # advances *every* leg (the crashable step)
+
+
+def scenario_rescale_concurrent(st, model) -> None:
+    """Online 2->4 rescale: two split legs on disjoint shard pairs drain
+    concurrently (one rescale_start, interleaved per-leg checkpoints, two
+    per-leg finishes, one rescale_finish), with live traffic between ticks."""
+    assert st.rescale(4) == 2
+    _rescale_rounds(st, model)
+
+
+def scenario_snapshot_mid_rescale(st, model) -> None:
+    """Like ``rescale_concurrent``, but a truncating coordinator snapshot —
+    whose record carries the multi-leg rescale state — lands between two
+    migration ticks, so the sites cover recovery from the snapshot root."""
+    assert st.rescale(4) == 2
+    _rescale_rounds(st, model, snapshot_at=1)
+
+
+def _prelude_grow4(st, model) -> None:
+    assert st.rescale(4) == 2
+    st.drain_migration(max_ticks=10_000)
+
+
+def scenario_rescale_shrink(st, model) -> None:
+    """Online 4->2 rescale: two non-adjacent merge legs in flight
+    concurrently, their sources retired as each leg finishes."""
+    assert st.rescale(2) == 2
+    _rescale_rounds(st, model)
+
+
 SCENARIOS = {
     "split": (_prelude_none, scenario_split),
     "merge": (_prelude_split, scenario_merge),
     "mid_migration": (_prelude_none, scenario_mid_migration),
     "snapshot_mid_migration": (_prelude_none, scenario_snapshot_mid_migration),
+    "rescale_concurrent": (_prelude_none, scenario_rescale_concurrent),
+    "snapshot_mid_rescale": (_prelude_none, scenario_snapshot_mid_rescale),
+    "rescale_shrink": (_prelude_grow4, scenario_rescale_shrink),
     "lifetime_gc": (_prelude_none, scenario_lifetime_gc),
     "lifetime_mid_migration": (_prelude_none, scenario_lifetime_mid_migration),
 }
@@ -284,6 +326,93 @@ def test_scenarios_emit_the_expected_record_sites():
             assert kinds.count("snapshot") == 1, (name, kinds)
 
 
+def test_rescale_scenarios_emit_the_expected_record_sites():
+    """Every rescale scenario journals the new record kinds at enumerable
+    sites: one ``rescale_start``, >= 2 interleaved per-leg checkpoints per
+    leg, one per-leg ``finish`` each, and a closing ``rescale_finish``."""
+    for name in ("rescale_concurrent", "snapshot_mid_rescale", "rescale_shrink"):
+        base, total, kinds = _site_range(name, BATCH_KEYS)
+        assert total > base, name
+        assert kinds[0] == "rescale_start", (name, kinds)
+        assert kinds[-1] == "rescale_finish", (name, kinds)
+        assert kinds.count("finish") == 2, (name, kinds)
+        assert kinds.count("checkpoint") >= 4, (name, kinds)
+    _, _, kinds = _site_range("snapshot_mid_rescale", BATCH_KEYS)
+    assert kinds.count("snapshot") == 1, kinds
+
+
+# ------------------------------------------------- hash-fleet rescale sweep
+# The range harness above reuses the range store's registry; the hash fleet
+# journals its rescale through the same record kinds but with mod routing,
+# draining ex-slots on shrink, and a lazily created metalog — swept here.
+
+def _hash_build() -> tuple[ShardedStore, dict[bytes, bytes]]:
+    keys = [make_key(i) for i in range(N_KEYS)]
+    st = ShardedStore(2, small_config(), migration_batch_keys=BATCH_KEYS)
+    model = {k: _value(i) for i, k in enumerate(keys)}
+    st.put_many(list(model.items()))
+    st.flush_all()
+    st._ensure_metalog()  # so crash_after can arm before the first record
+    return st, model
+
+
+def _hash_scenario(st, model, to_shards: int) -> None:
+    assert st.rescale(to_shards) == 2
+    _rescale_rounds(st, model)
+
+
+def _hash_grow_first(st) -> None:
+    st.rescale(4)
+    st.drain_migration(max_ticks=10_000)
+
+
+@pytest.mark.parametrize("to_shards,prelude",
+                         [(4, None), (2, _hash_grow_first)],
+                         ids=["grow", "shrink"])
+def test_hash_rescale_crashpoints(to_shards, prelude):
+    """Crash + recover + resume at every (sampled) rescale WAL site of a hash
+    fleet: zero lost keys, zero duplicated keys, and the interrupted rescale
+    rolls forward — including shrink legs whose draining ex-slots must retire."""
+    def fresh():
+        st, model = _hash_build()
+        if prelude is not None:
+            prelude(st)
+        return st, model
+
+    st, model = fresh()
+    base = st.metalog.total_appended
+    kinds: list[str] = []
+    inner = st.metalog.append
+
+    def recording_append(record):
+        kinds.append(record["kind"])
+        return inner(record)
+
+    st.metalog.append = recording_append
+    _hash_scenario(st, model, to_shards)
+    total = st.metalog.total_appended
+    assert kinds[0] == "rescale_start" and kinds[-1] == "rescale_finish", kinds
+    assert kinds.count("finish") == 2 and kinds.count("checkpoint") >= 4, kinds
+
+    for site in _sample(base, total, TIER1_SITE_CAP):
+        st, model = fresh()
+        st.metalog.crash_after(site)
+        crashed = False
+        try:
+            _hash_scenario(st, model, to_shards)
+        except CrashPoint:
+            crashed = True
+        st.metalog.disarm()
+        st.crash()
+        st.recover()
+        _assert_oracle_identical(st, model, ("hash", to_shards, site, "post-recovery"))
+        st.drain_migration(max_ticks=10_000)
+        assert st._rescale is None and not st._migrations, (to_shards, site)
+        assert not st._draining, (to_shards, site)  # ex-slots retired
+        _assert_oracle_identical(st, model, ("hash", to_shards, site, "post-resume"))
+        assert crashed == (site < total), (to_shards, site)
+
+
 def test_lifetime_scenarios_emit_cutoff_and_reclaim_sites():
     """The lifetime scenarios' WAL streams contain both new record kinds —
     adaptive-cutoff cutovers and GC reclaim fences — and the mid-migration
@@ -349,7 +478,7 @@ def test_post_truncation_recovery_byte_identical_to_genesis():
 
     def drive(truncate: bool):
         st, model = build(BATCH_KEYS)
-        assert st.split(0, background=True)
+        assert st._split(0, background=True)
         for round_ in range(50):
             if st.migration is None:
                 break

@@ -1,10 +1,11 @@
-"""Data pipeline determinism, elastic/straggler policies, YCSB generator."""
+"""Data pipeline determinism, elastic rescale planner, YCSB generator."""
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS
 from repro.core.ycsb import MIXES, Workload, ZipfGenerator
 from repro.data.pipeline import DataConfig, host_batch
-from repro.elastic.remap import StragglerPolicy, shrink_mesh
+from repro.elastic.remap import RescaleState, Topology, plan_rescale
 
 
 # ------------------------------------------------------------------ pipeline
@@ -32,31 +33,55 @@ def test_pipeline_modality_stubs():
 
 
 # ------------------------------------------------------------------- elastic
-def test_shrink_mesh_prefers_model_axis():
-    m = shrink_mesh(1, prefer_model=16)
-    assert m.shape["model"] == 1 and m.shape["data"] == 1
+def test_hash_grow_moves_minimal_fraction():
+    plan = plan_rescale(Topology("hash", 4), 8)
+    assert plan.new_shards == 8 and len(plan.legs) == 4
+    # consistent-hashing-style property of mod routing: each new slot j
+    # pulls only from j mod N, moving (M-N)/M of the keys
+    assert {(l.src, l.dst) for l in plan.legs} == {(0, 4), (1, 5), (2, 6), (3, 7)}
+    assert plan.moved_fraction == pytest.approx(0.5)
 
 
-def test_straggler_policy_flags_and_rebalances():
-    pol = StragglerPolicy(threshold=1.5, min_samples=3)
-    for step in range(5):
-        for h in range(4):
-            pol.observe(h, 1.0 if h != 2 else 3.0)
-    assert pol.stragglers() == [2]
-    alloc = pol.rebalance(256, [0, 1, 2, 3])
-    assert sum(alloc.values()) == 256
-    assert alloc[2] < alloc[0]  # straggler gets less work
-    assert min(alloc.values()) >= 1
+def test_hash_shrink_is_divisor_only():
+    plan = plan_rescale(Topology("hash", 8), 2)
+    assert {(l.src, l.dst) for l in plan.legs} == {
+        (2, 0), (3, 1), (4, 0), (5, 1), (6, 0), (7, 1)}
+    assert plan.moved_fraction == pytest.approx(0.75)
+    with pytest.raises(ValueError, match="multiple or divisor"):
+        plan_rescale(Topology("hash", 4), 6)
 
 
-def test_straggler_policy_quiet_when_uniform():
-    pol = StragglerPolicy()
-    for step in range(5):
-        for h in range(4):
-            pol.observe(h, 1.0 + 0.01 * h)
-    assert pol.stragglers() == []
-    alloc = pol.rebalance(64, [0, 1, 2, 3])
-    assert all(v == 16 for v in alloc.values())
+def test_range_grow_cuts_heaviest_ranges():
+    topo = Topology("range", 2, (b"", b"m"))
+    ks = [b"a%03d" % i for i in range(40)] + [b"z0", b"z1"]
+    plan = plan_rescale(topo, 4, key_sample=ks)
+    assert plan.new_shards == 4 and len(plan.legs) == 2
+    assert len(plan.boundaries) == 4 and plan.boundaries[0] == b""
+    # both cuts land in the heavy a-range; keys outside cut spans never move
+    assert all(b"" < b < b"m" for b in plan.boundaries[1:3])
+    assert 0 < plan.moved_fraction < 1
+
+
+def test_range_shrink_merges_lightest_nonadjacent_pairs():
+    topo = Topology("range", 4, (b"", b"b", b"c", b"d"))
+    ks = [b"a%02d" % i for i in range(30)] + [b"b0", b"c0", b"d0"]
+    plan = plan_rescale(topo, 2, key_sample=ks)
+    assert len(plan.legs) == 2 and len(plan.boundaries) == 2
+    assert all(l.kind == "merge" for l in plan.legs)
+    with pytest.raises(ValueError, match="stepwise"):
+        plan_rescale(topo, 1, key_sample=ks)
+
+
+def test_noop_and_state_progress():
+    plan = plan_rescale(Topology("hash", 4), 4)
+    assert plan.legs == () and plan.moved_fraction == 0.0
+    st = RescaleState(plan_rescale(Topology("hash", 2), 4), budget=4096)
+    assert st.legs_total == 2 and not st.done
+    st.legs_done = 2
+    assert st.done
+    p = st.progress()
+    assert p["from_shards"] == 2 and p["to_shards"] == 4
+    assert p["budget"] == 4096 and p["legs_done"] == 2
 
 
 # ---------------------------------------------------------------------- ycsb

@@ -16,6 +16,7 @@ import pytest
 import repro.api as api
 from repro.core import ParallaxStore, ShardedStore, StoreConfig
 from repro.core import ycsb
+from repro.core.range_shard import RangeShardedStore
 from repro.core.ycsb import Workload, make_key
 
 
@@ -78,6 +79,73 @@ def test_shims_delegate_byte_identically():
         assert [db.get(k) for k in probe] == [legacy.get(k) for k in probe]
         assert db.stats()["device"]["bytes_written"] == \
             sum(s.device.stats.bytes_written for s in legacy.shards)
+
+
+def _range_store(n=2, **kw) -> RangeShardedStore:
+    st = RangeShardedStore(n, small_config(), auto_rebalance=False, **kw)
+    for i in range(200):
+        st.put(b"k%05d" % i, b"v" * 40)
+    return st
+
+
+def test_split_shim_warns_once_and_delegates():
+    api.reset_deprecation_warnings()
+    st = _range_store()
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        assert st.split(0)
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)
+            and "RangeShardedStore.split" in str(w.message)]
+    assert len(deps) == 1 and "repro.api" in str(deps[0].message)
+    assert st.num_shards == 3  # the shim still mutates topology
+
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        assert st.split(1)
+    assert not [w for w in second if issubclass(w.category, DeprecationWarning)
+                and "RangeShardedStore.split" in str(w.message)]
+    assert st.num_shards == 4
+
+
+def test_merge_shim_warns_once_and_delegates():
+    api.reset_deprecation_warnings()
+    st = _range_store(4)
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        st.merge(0)
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)
+            and "RangeShardedStore.merge" in str(w.message)]
+    assert len(deps) == 1 and "repro.api" in str(deps[0].message)
+    assert st.num_shards == 3
+
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        st.merge(0)
+    assert not [w for w in second if issubclass(w.category, DeprecationWarning)
+                and "RangeShardedStore.merge" in str(w.message)]
+    assert st.num_shards == 2
+
+
+def test_auto_rebalance_and_rescale_never_warn():
+    """The internal policy path (_split/_merge) and the new rescale surface
+    must not trip the public-shim deprecations."""
+    api.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with api.open(partitioning=api.PartitioningConfig.parse(
+                "range:2", min_split_keys=16, rebalance_window=32),
+                store=small_config()) as db:
+            for lo in range(0, 400, 50):  # batched: policy runs at boundaries
+                wb = db.write_batch()
+                for i in range(lo, lo + 50):
+                    wb.put(b"r%05d" % i, b"v" * 40)
+                db.write(wb)
+            assert db.store.splits > 0  # the policy did rebalance
+            db.store.drain_migration()
+            db.rescale(db.store.num_shards * 2)
+            while db.topology()["rescale"] is not None:
+                db.migration_tick()
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]
 
 
 def test_engine_api_itself_never_warns():

@@ -147,7 +147,7 @@ def test_crash_before_split_start_record_aborts_the_split():
     st = _loaded_range_store()
     st.metalog.crash_after(st.metalog.n_records)  # the very next record dies
     with pytest.raises(CrashPoint):
-        st.split(0)
+        st._split(0)
     st.metalog.disarm()
     assert st.num_shards == 2  # metadata never flipped
     st.crash()
@@ -155,7 +155,7 @@ def test_crash_before_split_start_record_aborts_the_split():
     assert st.num_shards == 2 and len(st._all_stores()) == 2  # orphan dropped
     _assert_no_lost_or_dup(st, 600)
     # the map is still splittable afterwards
-    assert st.split(0)
+    assert st._split(0)
     _assert_no_lost_or_dup(st, 600)
 
 
@@ -171,7 +171,7 @@ def test_crash_after_boundary_flip_before_ranged_delete():
     st = _loaded_range_store()
     st.metalog.crash_after(st.metalog.n_records + 1)  # split_start lands,
     with pytest.raises(CrashPoint):                   # 1st checkpoint dies
-        st.split(0)
+        st._split(0)
     st.metalog.disarm()
     assert st.num_shards == 3  # boundary flipped before the crash
     st.crash()
@@ -194,12 +194,12 @@ def test_crash_mid_ranged_delete_drops_unflushed_tombstones():
     range — unflushed tombstones are lost, resurrecting stale copies, which
     must stay invisible on both sides of the boundary."""
     st = _loaded_range_store()
-    assert st.split(0)  # full split: copy + flip + ranged delete (unflushed)
+    assert st._split(0)  # full split: copy + flip + ranged delete (unflushed)
     st.crash()          # some tombstones above the boundary may be lost
     st.recover()
     _assert_no_lost_or_dup(st, 600)
     # and the topology keeps rebalancing cleanly afterwards
-    st.merge(0)
+    st._merge(0)
     _assert_no_lost_or_dup(st, 600)
 
 
@@ -210,7 +210,7 @@ def test_merge_after_crashed_split_cannot_resurrect_deleted_keys():
     src = st.shards[0]
     src.delete_range = lambda *a, **kw: (_ for _ in ()).throw(_CrashNow())
     with pytest.raises(_CrashNow):
-        st.split(0)  # window B: boundary flipped, stale copies remain in src
+        st._split(0)  # window B: boundary flipped, stale copies remain in src
     del src.delete_range
     st.crash()
     st.recover()
@@ -220,7 +220,7 @@ def test_merge_after_crashed_split_cannot_resurrect_deleted_keys():
     st.delete(victim)
     assert st.get(victim) is None
     # absorbing shard 1 back must not expose shard 0's stale copy of victim
-    st.merge(0)
+    st._merge(0)
     assert st.get(victim) is None, "crashed-split stale copy resurrected"
     keys = [k for k, _ in st.scan(b"", 1200)]
     assert victim not in keys
@@ -234,8 +234,8 @@ def test_migration_is_internal_work_not_application_traffic():
     st = _loaded_range_store()
     agg0 = st.aggregate_stats()
     dev0 = st.device_stats()
-    assert st.split(0)
-    st.merge(0)
+    assert st._split(0)
+    st._merge(0)
     agg = st.aggregate_stats()
     assert agg.app_bytes == agg0.app_bytes
     assert agg.scans == agg0.scans

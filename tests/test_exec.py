@@ -159,7 +159,7 @@ def test_async_range_crash_recover_mid_migration():
         st.flush_all()
         hot = max(range(st.num_shards),
                   key=lambda i: len(st.shards[i].live_keys_in(*st.bounds(i))))
-        assert st.split(hot, background=True)
+        assert st._split(hot, background=True)
         st.migration_tick()  # move one batch, leave the rest pending
         assert st.migration is not None
     # traffic over the half-migrated topology, then a crash mid-flight (the
@@ -292,7 +292,7 @@ def test_get_many_locks_pair_only_on_merged_queue():
                                        migration_batch_keys=1)
     store.put_many([(k, payload(104)) for k in keys])
     store.flush_all()
-    assert store.split(2, background=True)
+    assert store._split(2, background=True)
     assert store.migration is not None
     old_interval = sys.getswitchinterval()
     sys.setswitchinterval(1e-5)

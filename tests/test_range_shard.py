@@ -85,7 +85,7 @@ def test_scan_concatenation_is_globally_sorted_and_complete():
 def test_split_migrates_and_preserves_results():
     st = store_with_keys(300, 2, auto_rebalance=False)
     expect = st.scan(b"", 400)
-    assert st.split(0)
+    assert st._split(0)
     assert st.num_shards == 3
     assert st.splits == 1 and st.migrated_keys > 0
     assert st.scan(b"", 400) == expect
@@ -99,7 +99,7 @@ def test_split_migrates_and_preserves_results():
 def test_merge_absorbs_cold_neighbor():
     st = store_with_keys(300, 4, auto_rebalance=False)
     expect = st.scan(b"", 400)
-    st.merge(1)
+    st._merge(1)
     assert st.num_shards == 3
     assert st.merges == 1
     assert st.scan(b"", 400) == expect
@@ -145,9 +145,9 @@ def test_rebalance_preserves_every_result():
 
 def test_crash_recover_after_rebalance():
     st = store_with_keys(400, 2, auto_rebalance=False)
-    st.split(0)
-    st.split(1)
-    st.merge(0)
+    st._split(0)
+    st._split(1)
+    st._merge(0)
     st.flush_all()
     cutoffs = st.crash()
     st.recover()
@@ -161,7 +161,7 @@ def test_double_routing_read_counts_extra_probe():
     falls back to the draining old shard costs one extra front-end probe —
     ``get_probes``/``get_fallbacks`` record it, scans count the extra shard."""
     st = store_with_keys(300, 2, auto_rebalance=False, migration_batch_keys=10)
-    assert st.split(0, background=True)        # moved range [key75, key150)
+    assert st._split(0, background=True)        # moved range [key75, key150)
     m = st.migration
     assert m is not None and m.cursor == m.lo  # nothing copied yet
     g0, p0, f0 = st.gets, st.get_probes, st.get_fallbacks
@@ -189,7 +189,7 @@ def test_fallback_reads_fold_into_retired_shard_stats():
     reads *while draining* and only retires once drained — the reads it served
     must survive the retirement stat folding."""
     st = store_with_keys(200, 2, auto_rebalance=False, migration_batch_keys=20)
-    st.merge(0, background=True)
+    st._merge(0, background=True)
     assert st.migration is not None
     for i in range(150, 160):  # pending keys: served by the draining source
         assert st.get(make_key(i)) == b"v" * 60
@@ -208,7 +208,7 @@ def test_background_split_is_incremental_and_bounded_per_tick():
     metadata WAL records every checkpoint."""
     st = store_with_keys(300, 2, auto_rebalance=False, migration_batch_keys=10)
     rec0 = st.metalog.n_records
-    assert st.split(0, background=True)
+    assert st._split(0, background=True)
     assert st.migration is not None
     ticks = 0
     while st.migration is not None:
@@ -233,7 +233,7 @@ def test_bounded_scan_during_merge_with_residue():
     # full split, then crash: the unflushed ranged-delete tombstones are lost,
     # leaving stale live copies of the whole moved range [key50, key100) in
     # shard 0
-    assert st.split(0)
+    assert st._split(0)
     st.crash()
     st.recover()
     lo, hi = st.bounds(0)
@@ -243,7 +243,7 @@ def test_bounded_scan_during_merge_with_residue():
         st.delete(make_key(i))
     # merge shard 1 back: shard 0 becomes a migration destination whose
     # pending window is packed with pre-flip residue
-    st.merge(0, background=True)
+    st._merge(0, background=True)
     assert st.migration is not None
     # a post-flip insert sorting between residue keys
     kx = make_key(52) + b"!"
