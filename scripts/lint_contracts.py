@@ -3,6 +3,7 @@
 
     python scripts/lint_contracts.py               # lint the default targets
     python scripts/lint_contracts.py --self-test   # prove every rule fires
+    python scripts/lint_contracts.py --json        # machine-readable output
     python scripts/lint_contracts.py path.py ...   # lint explicit files
 
 Default targets are the modeled-path modules: ``src/repro/core/*.py`` plus
@@ -15,9 +16,16 @@ silently rot: every ``tests/fixtures/lint_bad/*.py`` declares the rules it
 plants with ``# lint-expect: <rule>`` lines and must produce exactly that rule
 set; every ``tests/fixtures/lint_good/*.py`` must lint clean; and every
 registered rule must be covered by at least one bad fixture.
+
+``--json`` emits ``{"violations": [{"path", "line", "rule", "message"}],
+"files": N}`` (the same shape as ``scripts/check_protocol.py --json``); the
+default text format (``path:line: [rule] message``) is matched by
+``.github/problem-matchers/repro-analysis.json`` so CI annotates the
+offending diff lines.
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import re
 import sys
@@ -82,6 +90,8 @@ def main(argv: list[str]) -> int:
     if "--help" in argv or "-h" in argv:
         print(__doc__)
         return 0
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
     if "--self-test" in argv:
         rest = [a for a in argv if a != "--self-test"]
         if rest:
@@ -98,13 +108,24 @@ def main(argv: list[str]) -> int:
         print(f"error: no such file(s): {[str(m) for m in missing]}", file=sys.stderr)
         return 2
     violations = lint_paths(targets)
-    for v in violations:
-        print(v)
+    if as_json:
+        print(json.dumps({
+            "violations": [
+                {"path": v.path, "line": v.lineno, "rule": v.rule,
+                 "message": v.message}
+                for v in violations
+            ],
+            "files": len(targets),
+        }, indent=2))
+    else:
+        for v in violations:
+            print(v)
     if violations:
         print(f"{len(violations)} contract violation(s) in {len(targets)} file(s)",
               file=sys.stderr)
         return 1
-    print(f"contracts ok: {len(targets)} files clean")
+    if not as_json:
+        print(f"contracts ok: {len(targets)} files clean")
     return 0
 
 

@@ -16,8 +16,15 @@ them mechanically:
   detector, enabled with ``EngineConfig(debug_checks=True)`` or the
   ``REPRO_DEBUG_CHECKS`` env var.  Nothing here is imported unless a checker
   is switched on, so the production path provably pays nothing.
+* :mod:`repro.analysis.protocol` — the metadata-WAL record protocol declared
+  once (:data:`~repro.analysis.protocol.spec.WAL_SPEC`) and enforced three
+  ways: a static conformance pass over every append site
+  (``scripts/check_protocol.py``, a CI hard gate), a runtime stream monitor
+  behind the same debug switch as the race detector, and the spec-derived
+  coverage requirement of the crash-point sweep.
 
-See ``docs/analysis.md`` for the annotation vocabulary and how to add rules.
+See ``docs/analysis.md`` for the annotation vocabulary, the protocol spec,
+and how to add rules or record kinds.
 """
 
-__all__ = ["lint", "racecheck"]
+__all__ = ["lint", "protocol", "racecheck"]

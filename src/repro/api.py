@@ -538,10 +538,15 @@ class Engine:
         # off, nothing of repro.analysis ever loads (zero-overhead contract,
         # held by tests/test_analysis_racecheck.py)
         self.race_checker = None
+        self.protocol_monitor = None
         if config.debug_checks or _debug_checks_env():
             from repro.analysis.racecheck import attach_engine
+            from repro.analysis.protocol.monitor import (
+                attach_engine as attach_protocol_monitor,
+            )
 
             self.race_checker = attach_engine(self)
+            self.protocol_monitor = attach_protocol_monitor(self)
 
     @staticmethod
     def _build_store(cfg: EngineConfig):

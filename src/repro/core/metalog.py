@@ -105,7 +105,9 @@ class MetadataLog:
         """
         if not self._append_lock.acquire(blocking=False):
             raise RuntimeError(
-                "concurrent MetadataLog.append: metadata records must be "
+                f"concurrent MetadataLog.append of kind="
+                f"{record.get('kind') if isinstance(record, dict) else record!r}"
+                f" at LSN {self.total_appended}: metadata records must be "
                 "totally ordered (append only from executor sequence points)"
             )
         try:

@@ -1,0 +1,14 @@
+"""Planted violation: record-then-apply inverted — the split's boundary
+flip mutates ``self.boundaries`` *before* the ``split_start`` record is
+durable, so a crash between them leaves routed keys with no WAL evidence.
+"""
+# protocol-expect: fence-apply
+
+
+class Coordinator:
+    def split(self, at, dst_id):
+        self.boundaries.insert(1, at)  # applied before the record: wrong
+        self.metalog.append({
+            "kind": "split_start", "src": 0, "dst": dst_id,
+            "at": at, "hi": None, "epoch": 0,
+        })

@@ -1,0 +1,14 @@
+"""Planted violation: the acceptance-criteria reorder — a migration batch
+is written into the destination but the ``checkpoint`` record commits
+*before* ``dst.flush_all()``.  A crash between the append and the flush
+loses data the durable record already claims ownership of.
+"""
+# protocol-expect: fence-flush
+
+
+class Coordinator:
+    def migrate_batch(self, dst, batch):
+        for key, row in batch:
+            dst._write(key, row, tombstone=False, internal=True)
+        self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+        dst.flush_all()  # too late: the record is already durable

@@ -1,0 +1,10 @@
+"""Planted violation: WAL truncation with no preceding snapshot append on
+any path — the rename-before-truncate discipline requires the replacement
+root record to be durable before the prefix it replaces is dropped.
+"""
+# protocol-expect: fence-truncate
+
+
+class Coordinator:
+    def compact_wal(self):
+        self.metalog.truncate(0)

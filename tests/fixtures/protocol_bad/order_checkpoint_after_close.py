@@ -1,0 +1,14 @@
+"""Planted violation: a checkpoint appended after the rescale is closed.
+
+``rescale_finish`` moves the automaton RESCALE -> IDLE; a subsequent
+``checkpoint`` has no feasible from-state left (it needs LEG or RESCALE),
+so the ordering pass reports the stream as infeasible at the second append.
+"""
+# protocol-expect: order
+
+
+class Coordinator:
+    def close_then_checkpoint(self, dst):
+        dst.flush_all()
+        self.metalog.append({"kind": "rescale_finish"})
+        self.metalog.append({"kind": "checkpoint", "cursor": b"k"})

@@ -1,0 +1,11 @@
+"""Planted violation: a ``checkpoint`` record misspelling its required
+``cursor`` key — recovery replay would silently see no cursor and restart
+the leg from the beginning.
+"""
+# protocol-expect: payload-keys
+
+
+class Coordinator:
+    def checkpoint(self, dst):
+        dst.flush_all()
+        self.metalog.append({"kind": "checkpoint", "cur": b"k"})

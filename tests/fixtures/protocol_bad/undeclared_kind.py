@@ -1,0 +1,10 @@
+"""Planted violation: an append of a record kind the spec never declared —
+the exact "new kind wired in while every checker stays silent" failure the
+protocol package exists to close.
+"""
+# protocol-expect: undeclared-kind
+
+
+class Coordinator:
+    def start_compaction(self):
+        self.metalog.append({"kind": "compact_start", "level": 1})

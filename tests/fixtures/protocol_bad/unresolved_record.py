@@ -1,0 +1,10 @@
+"""Planted violation: an append whose record the dataflow pass cannot
+resolve to a literal dict (built by a helper call) — the checker refuses
+to pass code it cannot prove conformant.
+"""
+# protocol-expect: unresolved-kind
+
+
+class Coordinator:
+    def opaque_append(self):
+        self.metalog.append(self._make_record())

@@ -1,0 +1,39 @@
+"""Conforming fixture: one function exercising every spec kind in a legal
+order with every fence honored — genesis, a cutoff cutover, a split leg
+(flush then checkpoint then finish), a merge leg, a GC reclaim behind its
+flush fence, a hash rescale bracketed by rescale_start/rescale_finish, and
+a snapshot rooting a truncation.  Must check clean even with the
+completeness requirement on.
+"""
+# protocol-flags: require-complete
+
+
+class Coordinator:
+    def lifecycle(self, dst):
+        self.metalog.append({"kind": "init", "boundaries": [], "shards": []})
+        self.metalog.append(
+            {"kind": "cutoff", "shard": 0, "t_sm": 1, "t_ml": 2})
+        self.metalog.append({
+            "kind": "split_start", "src": 0, "dst": 1,
+            "at": b"m", "hi": None, "epoch": 0,
+        })
+        dst.flush_all()
+        self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+        self.metalog.append({"kind": "finish"})
+        self.metalog.append({
+            "kind": "merge_start", "src": 1, "dst": 0,
+            "lo": b"a", "hi": b"z", "epoch": 1,
+        })
+        self.metalog.append({"kind": "finish"})
+        self.metalog.append(
+            {"kind": "gc_reclaim", "shard": 0, "log": "large", "segment": 0})
+        self.metalog.append({
+            "kind": "rescale_start", "scheme": "hash",
+            "from": 1, "to": 2, "legs": [],
+        })
+        self.metalog.append({"kind": "rescale_finish"})
+        self.metalog.append({
+            "kind": "snapshot", "boundaries": [], "shards": [],
+            "next_shard_id": 2, "migration": None, "cutoffs": {},
+        })
+        self.metalog.truncate(0)

@@ -341,6 +341,32 @@ def test_rescale_scenarios_emit_the_expected_record_sites():
     assert kinds.count("snapshot") == 1, kinds
 
 
+def test_spec_derived_crash_coverage():
+    """The crash sweep's required record-kind coverage is *derived from the
+    protocol spec*, not hand-maintained: (a) the static append-site inventory
+    of the real tree must emit exactly the spec's kinds — a new kind wired
+    into the code without a spec entry fails in ``check_protocol.py``, and a
+    spec entry with no site fails its completeness check; (b) every
+    non-genesis spec kind must appear in some scenario's enumerated site
+    list, so adding a record kind without extending the crash sweep is a
+    test failure here, not a silent coverage gap."""
+    from repro.analysis.protocol.spec import WAL_SPEC
+    from repro.analysis.protocol.static_check import append_site_inventory
+
+    inventory_kinds = {s.kind for s in append_site_inventory()}
+    assert inventory_kinds == set(WAL_SPEC.kind_names)
+
+    swept: set[str] = set()
+    for name in SCENARIOS:
+        _base, _total, kinds = _site_range(name, BATCH_KEYS)
+        swept |= set(kinds)
+    missing = WAL_SPEC.crash_coverage_kinds() - swept
+    assert not missing, (
+        f"spec kinds with no crash-scenario coverage: {sorted(missing)} — "
+        "add or extend a scenario in SCENARIOS so the sweep enumerates a "
+        "crash site at each of these records")
+
+
 # ------------------------------------------------- hash-fleet rescale sweep
 # The range harness above reuses the range store's registry; the hash fleet
 # journals its rescale through the same record kinds but with mod routing,

@@ -1,0 +1,398 @@
+"""Tests for the runtime WAL-protocol monitor
+(``repro.analysis.protocol.monitor``).
+
+Covers the stream validator on hand-built good/bad streams, live engine
+runs across all six partitioning x execution combos (zero false positives
+is the acceptance bar), crash/recover mid-migration and mid-rescale with
+replay validation, the planted flush-reorder bug (the acceptance-criteria
+ordering bug, caught here at runtime and by the static pass via its
+fixture), observational transparency (monitor on vs off byte-identical),
+and the zero-overhead-off contract (debug off never imports the package —
+subprocess-pinned).
+
+A hypothesis property test drives random op/maintenance interleavings
+against a live monitored engine when hypothesis is installed
+(optional-deps policy: importorskip).
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+import repro.api as api
+from repro.analysis.protocol.monitor import (
+    ProtocolMonitor,
+    ProtocolViolation,
+    attach_store,
+    store_is_clean,
+)
+from repro.core import RangeShardedStore, StoreConfig
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+COMBOS = [("none", "serial"), ("none", "async"),
+          ("hash:2", "serial"), ("hash:2", "async"),
+          ("range:2", "serial"), ("range:2", "async")]
+
+
+def small_config(**kw) -> StoreConfig:
+    defaults = dict(l0_capacity=1 << 12, cache_bytes=1 << 15,
+                    segment_bytes=1 << 14, chunk_bytes=1 << 11)
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def open_engine(partitioning="range:2", execution="serial", **kw) -> api.Engine:
+    return api.open(api.EngineConfig(store=small_config(),
+                                     partitioning=partitioning,
+                                     execution=execution, **kw))
+
+
+# ------------------------------------------------------- stream validation --
+
+
+def test_valid_lifecycle_stream_accepted():
+    mon = ProtocolMonitor()
+    n = mon.validate_stream([
+        {"kind": "init", "boundaries": [b""], "shards": [0]},
+        {"kind": "cutoff", "shard": 0, "t_sm": 1, "t_ml": 2},
+        {"kind": "split_start", "src": 0, "dst": 1, "at": b"m",
+         "hi": None, "epoch": 0},
+        {"kind": "checkpoint", "cursor": b"m"},
+        {"kind": "finish"},
+        {"kind": "gc_reclaim", "shard": 0, "log": "large", "segment": 0},
+        {"kind": "rescale_start", "scheme": "hash", "from": 1, "to": 2,
+         "legs": [[0, 1, 7]]},
+        {"kind": "checkpoint", "cursor": b"", "leg": 0},
+        {"kind": "finish", "leg": 0},
+        {"kind": "rescale_finish"},
+        {"kind": "snapshot", "boundaries": [b""], "shards": [0],
+         "next_shard_id": 2, "migration": None, "cutoffs": {}},
+    ])
+    assert n == 11 and mon.records_checked == 11
+
+
+def test_snapshot_can_root_a_truncated_stream():
+    ProtocolMonitor().validate_stream([
+        {"kind": "snapshot", "boundaries": [b""], "shards": [0],
+         "next_shard_id": 1, "migration": None, "cutoffs": {}},
+        {"kind": "cutoff", "shard": 0, "t_sm": 1, "t_ml": 2},
+    ])
+
+
+def test_rescale_start_can_open_a_stream():
+    # the hash front-end's lazily created metalog: first record is the rescale
+    ProtocolMonitor().validate_stream([
+        {"kind": "rescale_start", "scheme": "hash", "from": 2, "to": 4,
+         "legs": [[0, 2, 5], [1, 3, 5]]},
+        {"kind": "checkpoint", "cursor": b"", "leg": 0},
+        {"kind": "finish", "leg": 0},
+        {"kind": "finish", "leg": 1},
+        {"kind": "rescale_finish"},
+    ])
+
+
+def _violates(records) -> str:
+    with pytest.raises(ProtocolViolation) as exc:
+        ProtocolMonitor().validate_stream(records)
+    return str(exc.value)
+
+
+def test_rejects_unknown_kind():
+    msg = _violates([{"kind": "init", "boundaries": [], "shards": []},
+                     {"kind": "compact_start"}])
+    assert "not declared" in msg
+
+
+def test_rejects_non_start_kind_opening_stream():
+    msg = _violates([{"kind": "cutoff", "shard": 0, "t_sm": 1, "t_ml": 2}])
+    assert "cannot open a WAL stream" in msg
+
+
+def test_rejects_mid_stream_init():
+    msg = _violates([{"kind": "init", "boundaries": [], "shards": []},
+                     {"kind": "init", "boundaries": [], "shards": []}])
+    assert "genesis" in msg
+
+
+def test_rejects_payload_mismatch():
+    msg = _violates([{"kind": "init", "boundaries": [], "shards": []},
+                     {"kind": "checkpoint", "cur": b"k"}])
+    assert "payload mismatch" in msg
+
+
+def test_rejects_checkpoint_with_no_leg_in_flight():
+    msg = _violates([{"kind": "init", "boundaries": [], "shards": []},
+                     {"kind": "checkpoint", "cursor": b"k"}])
+    assert "no migration leg in flight" in msg
+
+
+def test_rejects_unknown_rescale_leg():
+    msg = _violates([
+        {"kind": "rescale_start", "scheme": "hash", "from": 1, "to": 2,
+         "legs": [[0, 1, 5]]},
+        {"kind": "checkpoint", "cursor": b"", "leg": 9},
+    ])
+    assert "not active" in msg
+
+
+def test_rejects_early_rescale_finish():
+    msg = _violates([
+        {"kind": "rescale_start", "scheme": "hash", "from": 1, "to": 2,
+         "legs": [[0, 1, 5]]},
+        {"kind": "rescale_finish"},
+    ])
+    assert "still active" in msg
+
+
+def test_rejects_overlapping_migrations():
+    msg = _violates([
+        {"kind": "init", "boundaries": [], "shards": []},
+        {"kind": "split_start", "src": 0, "dst": 1, "at": b"m",
+         "hi": None, "epoch": 0},
+        {"kind": "merge_start", "src": 1, "dst": 0, "lo": b"a",
+         "hi": b"z", "epoch": 0},
+    ])
+    assert "already in flight" in msg
+
+
+def test_violation_carries_record_window():
+    with pytest.raises(ProtocolViolation) as exc:
+        ProtocolMonitor().validate_stream([
+            {"kind": "init", "boundaries": [], "shards": []},
+            {"kind": "checkpoint", "cursor": b"k"},
+        ])
+    assert exc.value.record == {"kind": "checkpoint", "cursor": b"k"}
+    assert len(exc.value.window) == 2
+    assert "offending record window" in str(exc.value)
+
+
+# --------------------------------------------------- live engines: no FPs ---
+
+
+def _exercise(eng: api.Engine) -> None:
+    for i in range(200):
+        eng.put(b"m%05d" % i, b"v" * (i % 23 + 1))
+    for _ in range(6):
+        eng.migration_tick()
+    eng.flush_all()
+    eng.gc_tick(force=True)
+    for i in range(0, 200, 9):
+        assert eng.get(b"m%05d" % i) == b"v" * (i % 23 + 1)
+    assert len(eng.scan(b"m00000", 40)) == 40
+
+
+@pytest.mark.parametrize("partitioning,execution", COMBOS)
+def test_all_combos_run_clean_under_monitor(partitioning, execution):
+    with open_engine(partitioning, execution, debug_checks=True) as eng:
+        _exercise(eng)
+        if partitioning.startswith("hash") or partitioning == "none":
+            pass  # hash metalog is lazy: no records without a rescale
+        else:
+            assert eng.protocol_monitor is not None
+            assert eng.protocol_monitor.records_checked > 0
+        if partitioning == "none" and execution == "serial":
+            assert eng.protocol_monitor is None  # bare store: no WAL
+
+
+@pytest.mark.parametrize("partitioning", ["hash:2", "range:2"])
+def test_rescale_runs_clean_under_monitor(partitioning):
+    with open_engine(partitioning, "async", debug_checks=True) as eng:
+        for i in range(150):
+            eng.put(b"r%05d" % i, b"w" * 9)
+        eng.rescale(4)
+        for _ in range(300):
+            if eng.topology()["rescale"] is None:
+                break
+            eng.migration_tick()
+        assert eng.topology()["rescale"] is None
+        assert eng.protocol_monitor is not None
+        assert eng.protocol_monitor.records_checked > 0
+        for i in range(0, 150, 11):
+            assert eng.get(b"r%05d" % i) == b"w" * 9
+
+
+def test_crash_recover_mid_migration_validates_replay():
+    with open_engine("range:2", "serial", debug_checks=True) as eng:
+        for i in range(150):
+            eng.put(b"c%05d" % i, b"x" * 40)
+        eng.flush_all()
+        eng.migration_tick()
+        eng.crash()
+        eng.recover()
+        for i in range(0, 150, 7):
+            assert eng.get(b"c%05d" % i) == b"x" * 40
+        assert eng.protocol_monitor.replays_checked >= 1
+
+
+def test_crash_recover_mid_rescale_validates_replay():
+    with open_engine("range:2", "serial", debug_checks=True) as eng:
+        for i in range(150):
+            eng.put(b"c%05d" % i, b"x" * 40)
+        eng.flush_all()
+        eng.rescale(4)
+        eng.migration_tick()  # part-way through the legs
+        eng.crash()
+        eng.recover()
+        for _ in range(300):
+            if eng.topology()["rescale"] is None:
+                break
+            eng.migration_tick()
+        for i in range(0, 150, 7):
+            assert eng.get(b"c%05d" % i) == b"x" * 40
+        assert eng.protocol_monitor.replays_checked >= 1
+        assert eng.protocol_monitor.records_checked > 0
+
+
+def test_snapshot_truncate_cycle_clean_under_monitor(tmp_path):
+    with open_engine("range:2", "serial", debug_checks=True,
+                     snapshot_dir=str(tmp_path)) as eng:
+        for i in range(120):
+            eng.put(b"s%05d" % i, b"y" * 25)
+        eng.migration_tick()
+        eng.snapshot()
+        for i in range(120, 160):
+            eng.put(b"s%05d" % i, b"y" * 25)
+        eng.snapshot()
+        assert eng.protocol_monitor.records_checked > 0
+
+
+# ------------------------------------------------------- planted bug ---------
+
+
+def test_planted_flush_reorder_caught_live():
+    """The acceptance-criteria bug: the destination's flush is disabled so a
+    migration checkpoint commits while the copied batch is still volatile —
+    the monitor must raise at the exact offending append.  (The static twin
+    of this bug is ``tests/fixtures/protocol_bad/fence_flush_reordered.py``.)
+    """
+    st = RangeShardedStore(2, small_config(), auto_rebalance=False,
+                           migration_batch_keys=16)
+    monitor = attach_store(st)
+    assert monitor is not None
+    for i in range(200):
+        st.put(b"p%05d" % i, b"z" * 60)
+    assert st._split(0, at=b"p00050", background=True)
+    dst = st._by_id[st._migrations[0].dst_id]
+    dst.flush_all = lambda: None  # the planted reorder: fence becomes a no-op
+    with pytest.raises(ProtocolViolation) as exc:
+        for _ in range(50):
+            st.migration_tick()
+    assert "flush-before-append fence broken" in str(exc.value)
+    assert not store_is_clean(dst)
+
+
+def test_unpatched_migration_is_fence_clean():
+    # control for the planted-bug test: same run, fence intact, no violation
+    st = RangeShardedStore(2, small_config(), auto_rebalance=False,
+                           migration_batch_keys=16)
+    monitor = attach_store(st)
+    for i in range(200):
+        st.put(b"p%05d" % i, b"z" * 60)
+    assert st._split(0, at=b"p00050", background=True)
+    for _ in range(50):
+        st.migration_tick()
+    assert st.migration is None
+    assert monitor.records_checked >= 3  # init, split_start, checkpoints...
+
+
+# ------------------------------------------------ transparency / off=off ----
+
+
+def _run_workload(eng: api.Engine):
+    out = []
+    for i in range(150):
+        eng.put(b"w%04d" % i, b"x" * (i % 17 + 1))
+    for _ in range(4):
+        eng.migration_tick()
+    for i in range(0, 150, 5):
+        out.append(eng.get(b"w%04d" % i))
+    out.append(eng.scan(b"w0000", 25))
+    eng.gc_tick(force=True)
+    return out, eng.stats()
+
+
+@pytest.mark.parametrize("partitioning,execution",
+                         [("range:2", "serial"), ("hash:2", "async")])
+def test_monitor_is_observationally_transparent(partitioning, execution):
+    with open_engine(partitioning, execution, debug_checks=False) as eng:
+        plain_out, plain_stats = _run_workload(eng)
+    with open_engine(partitioning, execution, debug_checks=True) as eng:
+        mon_out, mon_stats = _run_workload(eng)
+    assert mon_out == plain_out
+    assert mon_stats == plain_stats
+
+
+def test_debug_off_no_monitor_no_import(monkeypatch):
+    monkeypatch.delenv("REPRO_DEBUG_CHECKS", raising=False)
+    with open_engine(debug_checks=False) as eng:
+        assert eng.protocol_monitor is None
+        assert not getattr(eng._store, "metalog", None) or \
+            not getattr(eng._store.metalog, "_protocol_monitored", False)
+
+
+def test_debug_off_never_imports_protocol_package():
+    # the strongest zero-overhead statement, subprocess-pinned: a full
+    # workload with checks off loads nothing under repro.analysis at all
+    script = (
+        "import sys\n"
+        "import repro.api as api\n"
+        "from repro.core import StoreConfig\n"
+        "cfg = api.EngineConfig(store=StoreConfig(l0_capacity=1<<12),\n"
+        "                       partitioning='range:2')\n"
+        "with api.open(cfg) as eng:\n"
+        "    for i in range(64):\n"
+        "        eng.put(b'k%02d' % i, b'v')\n"
+        "    eng.migration_tick()\n"
+        "assert not any(m.startswith('repro.analysis') for m in sys.modules), \\\n"
+        "    sorted(m for m in sys.modules if m.startswith('repro.analysis'))\n"
+    )
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ------------------------------------------------------ property test --------
+
+
+def test_random_interleavings_have_zero_false_positives(tmp_path):
+    hyp = pytest.importorskip("hypothesis")
+    st_mod = pytest.importorskip("hypothesis.strategies")
+    given, settings = hyp.given, hyp.settings
+
+    ops = st_mod.lists(
+        st_mod.tuples(st_mod.sampled_from(["put", "delete", "tick", "flush",
+                                           "gc", "snapshot", "crashrec"]),
+                      st_mod.integers(min_value=0, max_value=127)),
+        min_size=1, max_size=40)
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=ops)
+    def run(ops):
+        with open_engine("range:2", "serial", debug_checks=True,
+                         snapshot_dir=str(tmp_path)) as eng:
+            for op, i in ops:
+                key = b"h%04d" % i
+                if op == "put":
+                    eng.put(key, b"v" * (i % 29 + 1))
+                elif op == "delete":
+                    eng.delete(key)
+                elif op == "tick":
+                    eng.migration_tick()
+                elif op == "flush":
+                    eng.flush_all()
+                elif op == "gc":
+                    eng.gc_tick(force=True)
+                elif op == "snapshot":
+                    eng.snapshot()
+                elif op == "crashrec":
+                    eng.crash()
+                    eng.recover()
+            # a ProtocolViolation anywhere above is a monitor false positive
+            assert eng.protocol_monitor.records_checked >= 1
+
+    run()

@@ -1,0 +1,333 @@
+"""Tests for the static WAL-protocol checker
+(``repro.analysis.protocol.static_check``).
+
+Covers the spec itself (automaton sanity), every rule against inline planted
+sources, the dataflow subtleties the real tree depends on (variable-resolved
+records, conditional payload keys, flush tracking across loops), the seeded
+fixtures under ``tests/fixtures/protocol_bad`` / ``protocol_good``, the
+real-tree-is-clean invariant with completeness on, the append-site inventory,
+and the CLI exit codes / ``--json`` output of ``scripts/check_protocol.py``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.protocol.spec import (
+    IDLE,
+    LEG,
+    RESCALE,
+    START,
+    WAL_SPEC,
+)
+from repro.analysis.protocol.static_check import (
+    PROTOCOL_RULES,
+    append_site_inventory,
+    check_paths,
+    check_source,
+    default_targets,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures"
+CHECK_SCRIPT = REPO / "scripts" / "check_protocol.py"
+
+
+def rules_of(source: str) -> set[str]:
+    violations, _sites = check_source(textwrap.dedent(source), "<test>")
+    return {v.rule for v in violations}
+
+
+# --------------------------------------------------------------------- spec --
+
+
+def test_spec_declares_every_wal_kind():
+    assert WAL_SPEC.kind_names == {
+        "init", "snapshot", "cutoff", "gc_reclaim", "split_start",
+        "merge_start", "rescale_start", "checkpoint", "finish",
+        "rescale_finish",
+    }
+
+
+def test_spec_automaton_steps():
+    assert WAL_SPEC.step(frozenset({START}), "init") == frozenset({IDLE})
+    assert WAL_SPEC.step(frozenset({IDLE}), "split_start") == frozenset({LEG})
+    assert WAL_SPEC.step(frozenset({LEG}), "finish") == frozenset({IDLE})
+    assert WAL_SPEC.step(frozenset({START, IDLE}), "rescale_start") == \
+        frozenset({RESCALE})
+    assert WAL_SPEC.step(frozenset({RESCALE}), "rescale_finish") == \
+        frozenset({IDLE})
+    # infeasible: checkpoint from a closed stream
+    assert WAL_SPEC.step(frozenset({IDLE}), "checkpoint") == frozenset()
+
+
+def test_spec_stream_start_and_crash_coverage():
+    assert WAL_SPEC.stream_start_kinds() == {
+        "init", "snapshot", "rescale_start"}
+    # init is genesis: exempt from the crash sweep (it precedes all data work)
+    assert WAL_SPEC.crash_coverage_kinds() == WAL_SPEC.kind_names - {"init"}
+
+
+# ---------------------------------------------------------- rules, inline ----
+
+
+def test_rule_order_checkpoint_after_close():
+    assert rules_of("""
+        class C:
+            def f(self, dst):
+                dst.flush_all()
+                self.metalog.append({"kind": "rescale_finish"})
+                self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+        """) == {"order"}
+
+
+def test_rule_fence_flush_reordered():
+    assert rules_of("""
+        class C:
+            def f(self, dst, batch):
+                for k in batch:
+                    dst._write(k, b"v", tombstone=False, internal=True)
+                self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+                dst.flush_all()
+        """) == {"fence-flush"}
+
+
+def test_rule_fence_flush_satisfied_is_clean():
+    assert rules_of("""
+        class C:
+            def f(self, dst, batch):
+                for k in batch:
+                    dst._write(k, b"v", tombstone=False, internal=True)
+                dst.flush_all()
+                self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+        """) == set()
+
+
+def test_rule_fence_flush_rewrite_after_flush_dirties():
+    # flush then write again: the CLEAN fact must be killed
+    assert rules_of("""
+        class C:
+            def f(self, dst):
+                dst.flush_all()
+                dst.put(b"k", b"v")
+                self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+        """) == {"fence-flush"}
+
+
+def test_rule_fence_apply_before_record():
+    assert rules_of("""
+        class C:
+            def f(self, at):
+                self.boundaries.insert(1, at)
+                self.metalog.append({"kind": "split_start", "src": 0,
+                                     "dst": 1, "at": at, "hi": None,
+                                     "epoch": 0})
+        """) == {"fence-apply"}
+
+
+def test_rule_fence_truncate_unrooted():
+    assert rules_of("""
+        class C:
+            def f(self):
+                self.metalog.truncate(0)
+        """) == {"fence-truncate"}
+
+
+def test_rule_undeclared_kind():
+    assert rules_of("""
+        class C:
+            def f(self):
+                self.metalog.append({"kind": "compact_start"})
+        """) == {"undeclared-kind"}
+
+
+def test_rule_payload_keys():
+    assert rules_of("""
+        class C:
+            def f(self, dst):
+                dst.flush_all()
+                self.metalog.append({"kind": "checkpoint", "cur": b"k"})
+        """) == {"payload-keys"}
+
+
+def test_rule_unresolved_record():
+    assert rules_of("""
+        class C:
+            def f(self):
+                self.metalog.append(self._make_record())
+        """) == {"unresolved-kind"}
+
+
+# ------------------------------------------------- dataflow subtleties -------
+
+
+def test_variable_record_with_conditional_key_resolves():
+    violations, sites = check_source(textwrap.dedent("""
+        class C:
+            def f(self, dst, m):
+                dst.flush_all()
+                rec = {"kind": "checkpoint", "cursor": b"k"}
+                if self._rescale is not None:
+                    rec["leg"] = m.dst_id
+                self.metalog.append(rec)
+        """), "<test>")
+    assert not violations
+    assert [s.kind for s in sites] == ["checkpoint"]
+
+
+def test_variable_rebind_checkpoint_then_finish():
+    # the real _advance_leg shape: rec reassigned between two appends
+    assert rules_of("""
+        class C:
+            def f(self, dst, done):
+                dst.flush_all()
+                rec = {"kind": "checkpoint", "cursor": b"k"}
+                self.metalog.append(rec)
+                if done:
+                    rec = {"kind": "finish"}
+                    self.metalog.append(rec)
+        """) == set()
+
+
+def test_flush_only_loop_satisfies_fence():
+    # the snapshot_metadata shape: flush the whole fleet in a loop
+    assert rules_of("""
+        class C:
+            def f(self, cuts):
+                for store in self._all_stores():
+                    store.flush_all()
+                self.metalog.append({"kind": "snapshot", "boundaries": [],
+                                     "shards": [], "next_shard_id": 1,
+                                     "migration": None, "cutoffs": cuts})
+                self.metalog.truncate(0)
+        """) == set()
+
+
+def test_order_resync_after_violation():
+    # one ordering bug must not cascade: the stream resynchronizes
+    assert rules_of("""
+        class C:
+            def f(self, dst):
+                dst.flush_all()
+                self.metalog.append({"kind": "rescale_finish"})
+                self.metalog.append({"kind": "checkpoint", "cursor": b"k"})
+                self.metalog.append({"kind": "finish"})
+        """) == {"order"}
+
+
+def test_branch_divergent_order_both_paths_checked():
+    # split_start is only legal from IDLE; after a rescale_start it is not
+    assert rules_of("""
+        class C:
+            def f(self, which):
+                if which:
+                    self.metalog.append({"kind": "rescale_start",
+                                         "scheme": "hash", "from": 1,
+                                         "to": 2, "legs": []})
+                    self.metalog.append({"kind": "split_start", "src": 0,
+                                         "dst": 1, "at": b"m", "hi": None,
+                                         "epoch": 0})
+        """) == {"order"}
+
+
+# --------------------------------------------------------- real tree ---------
+
+
+def test_real_tree_is_clean_and_complete():
+    violations = check_paths(require_complete=True)
+    assert violations == [], [str(v) for v in violations]
+
+
+def test_append_site_inventory_covers_every_kind():
+    sites = append_site_inventory()
+    assert {s.kind for s in sites} == set(WAL_SPEC.kind_names)
+    # every site resolved to a real file/line in the protocol tree
+    target_names = {p.name for p in default_targets()}
+    for s in sites:
+        assert pathlib.Path(s.path).name in target_names
+        assert s.lineno > 0 and s.func
+
+
+# ---------------------------------------------------------- fixtures ---------
+
+
+def test_bad_fixtures_flag_exactly_their_planted_rules():
+    bad = sorted((FIXTURES / "protocol_bad").glob("*.py"))
+    assert len(bad) >= len(PROTOCOL_RULES) - 1  # one fixture may cover two
+    covered: set[str] = set()
+    for path in bad:
+        text = path.read_text(encoding="utf-8")
+        expected = {
+            line.split("protocol-expect:")[1].strip()
+            for line in text.splitlines() if "protocol-expect:" in line
+        }
+        assert expected, f"{path.name} declares no planted rules"
+        complete = "require-complete" in text
+        actual = {v.rule for v in check_paths([path],
+                                              require_complete=complete)}
+        assert actual == expected, (
+            f"{path.name}: expected {sorted(expected)}, got {sorted(actual)}")
+        covered |= actual
+    assert covered == set(PROTOCOL_RULES)
+
+
+def test_good_fixture_is_clean_even_with_completeness():
+    good = sorted((FIXTURES / "protocol_good").glob("*.py"))
+    assert good
+    for path in good:
+        violations = check_paths([path], require_complete=True)
+        assert violations == [], [str(v) for v in violations]
+
+
+# --------------------------------------------------------------- CLI ---------
+
+
+def run_cli(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(CHECK_SCRIPT), *args],
+        capture_output=True, text=True, cwd=REPO)
+
+
+def test_cli_default_targets_clean_exit_0():
+    proc = run_cli()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "protocol ok" in proc.stdout
+
+
+def test_cli_self_test_exit_0():
+    proc = run_cli("--self-test")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "protocol self-test ok" in proc.stdout
+
+
+def test_cli_bad_fixture_exit_1():
+    proc = run_cli(str(FIXTURES / "protocol_bad" / "fence_flush_reordered.py"))
+    assert proc.returncode == 1
+    assert "[fence-flush]" in proc.stdout
+
+
+def test_cli_json_output_parses():
+    proc = run_cli("--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["violations"] == []
+    assert payload["files"] == len(default_targets())
+
+
+def test_cli_json_violations_have_matcher_fields():
+    proc = run_cli(
+        "--json", str(FIXTURES / "protocol_bad" / "undeclared_kind.py"))
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    (v,) = payload["violations"]
+    assert v["rule"] == "undeclared-kind"
+    assert v["path"].endswith("undeclared_kind.py") and v["line"] > 0
+
+
+def test_cli_usage_errors_exit_2():
+    assert run_cli("--bogus-flag").returncode == 2
+    assert run_cli("--self-test", "extra.py").returncode == 2
+    assert run_cli("no/such/file.py").returncode == 2
